@@ -1,0 +1,145 @@
+"""Microbenchmarks of the framework's own moving parts (measured on this
+host, CPU): wire serialization, transports, kernels-via-oracle, MoE
+dispatch, serving engine throughput, real loopback offload of
+OpenPose-lite (the end-to-end AVEC cycle with real timing)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduced
+
+
+def _time(fn, n: int = 5, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n
+
+
+def bench_serialization() -> list:
+    from repro.core.serialization import pack_message, unpack_message
+    x = {"x": np.random.default_rng(0).standard_normal((512, 512))
+         .astype(np.float32)}
+    rows = []
+    for codec in ("raw", "zstd", "int8"):
+        data = pack_message({}, x, codec=codec)
+        t_pack = _time(lambda: pack_message({}, x, codec=codec))
+        t_unpack = _time(lambda: unpack_message(data))
+        mbps = x["x"].nbytes / t_pack / 1e6
+        rows.append((f"serialize/{codec}", t_pack * 1e6,
+                     f"{mbps:.0f}MB/s wire={len(data)}B"))
+        rows.append((f"deserialize/{codec}", t_unpack * 1e6, ""))
+    return rows
+
+
+def bench_transport() -> list:
+    from repro.core.transport import TCPChannel, TCPServer
+    server = TCPServer(lambda b: b).start()
+    ch = TCPChannel.connect("127.0.0.1", server.port)
+    small, big = b"x" * 64, b"x" * (4 << 20)
+    r1 = _time(lambda: ch.request(small), n=50)
+    r2 = _time(lambda: ch.request(big), n=10)
+    ch.close()
+    server.stop()
+    return [("tcp/roundtrip_64B", r1 * 1e6, ""),
+            ("tcp/roundtrip_4MB", r2 * 1e6,
+             f"{(len(big) * 2) / r2 / 1e6:.0f}MB/s")]
+
+
+def bench_kernels() -> list:
+    """Oracle-path timings (CPU): relative costs of the hot ops."""
+    from repro.kernels import ref
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 8, 512, 64))
+    k = jax.random.normal(ks[1], (1, 8, 512, 64))
+    v = jax.random.normal(ks[2], (1, 8, 512, 64))
+    fa = jax.jit(lambda q, k, v: ref.flash_attention(q, k, v))
+    t1 = _time(lambda: jax.block_until_ready(fa(q, k, v)))
+    x = jax.random.normal(ks[0], (4096, 1024))
+    s = jnp.ones((1024,))
+    rms = jax.jit(lambda x, s: ref.rmsnorm(x, s))
+    t2 = _time(lambda: jax.block_until_ready(rms(x, s)))
+    qz = jax.jit(lambda x: ref.quantize_int8(x))
+    t3 = _time(lambda: jax.block_until_ready(qz(x)))
+    return [("kernel_ref/attention_8h_512", t1 * 1e6, ""),
+            ("kernel_ref/rmsnorm_4Mx", t2 * 1e6, ""),
+            ("kernel_ref/quant_int8_4MB", t3 * 1e6, "")]
+
+
+def bench_moe_dispatch() -> list:
+    from repro.models import model as M
+    from repro.models.moe import apply_moe
+    cfg = reduced(get_arch("arctic-480b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    moe_p = jax.tree_util.tree_map(lambda x: x[0],
+                                   params["blocks"])["layers"][0]["moe"]
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 64, cfg.d_model))
+    f = jax.jit(lambda p, x: apply_moe(cfg, p, x)[0])
+    t = _time(lambda: jax.block_until_ready(f(moe_p, x)))
+    toks = 8 * 64
+    return [("moe/dispatch_512tok_4e", t * 1e6, f"{toks / t:.0f}tok/s")]
+
+
+def bench_engine() -> list:
+    from repro.models import model as M
+    from repro.serving.engine import Request, ServingEngine
+    cfg = reduced(get_arch("granite-3-2b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, max_batch=4, max_len=64)
+    rng = np.random.default_rng(0)
+    for i in range(8):
+        eng.submit(Request(f"r{i}", rng.integers(0, cfg.vocab_size, 8).tolist(),
+                           max_new_tokens=8))
+    t0 = time.perf_counter()
+    out = eng.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(v) for v in out.values())
+    return [("engine/continuous_batching", dt * 1e6,
+             f"{toks / dt:.0f}tok/s b=4")]
+
+
+def bench_avec_offload_real() -> list:
+    """Real loopback-TCP offload of the paper's workload (OpenPose-lite):
+    measures our framework's actual cycle overheads + Eq-1 style accounting."""
+    import repro.models.openpose as op
+    from repro.core.executor import DestinationExecutor, HostRuntime
+    from repro.core.interception import AvecSession
+    from repro.core.library import make_openpose_library
+    from repro.core.transport import TCPChannel, TCPServer
+    from repro.models.params import init_params
+
+    net = op.OpenPoseLite()
+    params = init_params(op.op_param_specs(net), jax.random.PRNGKey(0),
+                         jnp.float32)
+    ex = DestinationExecutor({"openpose": make_openpose_library(net)})
+    server = TCPServer(ex.handle).start()
+    ch = TCPChannel.connect("127.0.0.1", server.port)
+    rt = HostRuntime(ch)
+    sess = AvecSession(net, params, rt, "openpose")
+    t_model = time.perf_counter()
+    sess.ensure_model()
+    t_model = time.perf_counter() - t_model
+    frames = op.make_frames(1, 368, 656)
+    for _ in range(3):
+        sess.call("forward", {"frames": np.asarray(frames)})
+    ch.close()
+    server.stop()
+    b = sess.profiler.breakdown()
+    per = sess.profiler.per_cycle()
+    return [
+        ("avec_real/model_transfer", t_model * 1e6, "send-once"),
+        ("avec_real/cycle_gpu", per["gpu_s"] * 1e6, ""),
+        ("avec_real/cycle_comm", per["communication_s"] * 1e6,
+         f"{per['bytes_per_cycle'] / 1e6:.2f}MB/cycle"),
+        ("avec_real/comm_frac", b["communication_frac"] * 100, "percent"),
+    ]
+
+
+ALL_MICRO = [bench_serialization, bench_transport, bench_kernels,
+             bench_moe_dispatch, bench_engine, bench_avec_offload_real]

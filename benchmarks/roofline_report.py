@@ -1,0 +1,77 @@
+"""Roofline report: reads the dry-run artifacts and renders the §Roofline
+table (all cells) + per-cell bottleneck analysis rows for benchmarks.run."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def load_records(pattern: str = "*.json") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACTS, pattern))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def baseline_records(mesh: str = "single") -> list[dict]:
+    return [r for r in load_records()
+            if r.get("mesh") == mesh and not r.get("tag")
+            and r.get("profile", "dp_tp") == "dp_tp" and not r.get("overrides")]
+
+
+def rows() -> list:
+    out = []
+    for r in baseline_records("single"):
+        cell = f"roofline/{r['arch']}/{r['shape']}"
+        if r.get("skipped"):
+            out.append((cell, 0.0, "SKIP(full-attn long-context)"))
+            continue
+        if not r.get("ok"):
+            out.append((cell, 0.0, f"FAIL {r.get('error', '')[:40]}"))
+            continue
+        roof = r["roofline"]
+        out.append((cell, roof["bound_s"] * 1e6,
+                    f"dom={roof['dominant']} "
+                    f"c={roof['compute_s'] * 1e3:.1f}ms "
+                    f"m={roof['memory_s'] * 1e3:.1f}ms "
+                    f"x={roof['collective_s'] * 1e3:.1f}ms "
+                    f"useful={roof['useful_ratio']:.2f}"))
+    return out
+
+
+def markdown_table(mesh: str = "single", tag: str = "", profile: str = "dp_tp",
+                   overrides_ok: bool = False) -> str:
+    recs = [r for r in load_records()
+            if r.get("mesh") == mesh and r.get("tag", "") == tag
+            and r.get("profile", "dp_tp") == profile
+            and (overrides_ok or not r.get("overrides"))]
+    lines = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+        "dominant | 6ND/HLO | args/dev (GB) | fits 16GB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"])):
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped (full-attn @500k) | — | — | — |")
+            continue
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | | |")
+            continue
+        roof = r["roofline"]
+        args_gb = (r["memory_analysis"]["argument_bytes"] or 0) / 1e9
+        fits = "yes" if args_gb <= 16 else f"NO ({args_gb:.0f}GB)"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {roof['compute_s'] * 1e3:.1f} | "
+            f"{roof['memory_s'] * 1e3:.1f} | {roof['collective_s'] * 1e3:.1f} | "
+            f"{roof['dominant']} | {roof['useful_ratio']:.2f} | "
+            f"{args_gb:.2f} | {fits} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

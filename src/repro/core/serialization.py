@@ -1,0 +1,181 @@
+"""AVEC wire format: pytree <-> framed bytes, with data-transfer accounting.
+
+Frame layout (paper's Boost-ASIO forwarding, made explicit):
+
+    [4B magic 'AVEC'][4B u32 header_len][msgpack header][raw buffers...]
+
+The header carries the treedef (as a nested template), per-leaf dtype/shape,
+the codec, and arbitrary metadata.  Buffers are the raw (or compressed) leaf
+bytes in flattened order.
+
+``DataTransfer`` generalizes the paper's Eq. 1: DT = fixed header + sum of
+argument bytes + result bytes.  ``eq1_bytes`` reproduces the exact paper
+formula for an OpenPose frame (~3.75 MB at 1x3x368x656).
+
+Codecs (beyond-paper, the slow-link levers):
+  raw   — paper-faithful float32 forwarding
+  zstd  — lossless entropy compression
+  int8  — per-row symmetric quantization (repro.kernels.comm_quant) + zstd
+"""
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass, field
+from typing import Any
+
+import msgpack
+import numpy as np
+import zstandard
+
+MAGIC = b"AVEC"
+_ZSTD_C = zstandard.ZstdCompressor(level=1)
+_ZSTD_D = zstandard.ZstdDecompressor()
+
+
+# ---------------------------------------------------------------------------
+# pytree <-> (template, leaves)
+# ---------------------------------------------------------------------------
+
+def _flatten(obj: Any, leaves: list) -> Any:
+    """Replace array leaves with placeholder indices; return the template."""
+    if isinstance(obj, dict):
+        return {k: _flatten(v, leaves) for k, v in sorted(obj.items())}
+    if isinstance(obj, (list, tuple)):
+        t = [_flatten(v, leaves) for v in obj]
+        return {"__tuple__": t} if isinstance(obj, tuple) else t
+    if isinstance(obj, (np.ndarray, np.generic)) or hasattr(obj, "__array__"):
+        arr = np.asarray(obj)
+        leaves.append(arr)
+        return {"__leaf__": len(leaves) - 1, "dtype": str(arr.dtype),
+                "shape": list(arr.shape)}
+    return {"__value__": obj}
+
+
+def _unflatten(tmpl: Any, leaves: list) -> Any:
+    if isinstance(tmpl, dict):
+        if "__leaf__" in tmpl:
+            return leaves[tmpl["__leaf__"]]
+        if "__value__" in tmpl:
+            return tmpl["__value__"]
+        if "__tuple__" in tmpl:
+            return tuple(_unflatten(v, leaves) for v in tmpl["__tuple__"])
+        return {k: _unflatten(v, leaves) for k, v in tmpl.items()}
+    if isinstance(tmpl, list):
+        return [_unflatten(v, leaves) for v in tmpl]
+    return tmpl
+
+
+# bfloat16 is not a numpy dtype name numpy can construct from string via
+# np.dtype on all versions; ml_dtypes registers it with jax installed.
+def _np_dtype(name: str):
+    import ml_dtypes  # noqa: F401
+    return np.dtype(name)
+
+
+# ---------------------------------------------------------------------------
+# Codecs
+# ---------------------------------------------------------------------------
+
+def _encode_leaf(arr: np.ndarray, codec: str) -> tuple[bytes, dict]:
+    meta = {"dtype": str(arr.dtype), "shape": list(arr.shape)}
+    if codec == "int8" and arr.dtype in (np.float32, np.float64) and arr.ndim >= 1 \
+            and arr.size >= 64:
+        from repro.kernels import ref as kref
+        flat = np.ascontiguousarray(arr.reshape(-1, arr.shape[-1]), np.float32)
+        q, s = kref.quantize_int8(flat)
+        q, s = np.asarray(q), np.asarray(s)
+        payload = _ZSTD_C.compress(q.tobytes() + s.tobytes())
+        meta["codec"] = "int8"
+        meta["rows"] = int(flat.shape[0])
+        return payload, meta
+    raw = np.ascontiguousarray(arr).tobytes()
+    if codec in ("zstd", "int8"):
+        meta["codec"] = "zstd"
+        return _ZSTD_C.compress(raw), meta
+    meta["codec"] = "raw"
+    return raw, meta
+
+
+def _decode_leaf(buf: bytes, meta: dict) -> np.ndarray:
+    dtype = _np_dtype(meta["dtype"])
+    shape = tuple(meta["shape"])
+    codec = meta.get("codec", "raw")
+    if codec == "raw":
+        return np.frombuffer(buf, dtype).reshape(shape).copy()
+    raw = _ZSTD_D.decompress(buf)
+    if codec == "zstd":
+        return np.frombuffer(raw, dtype).reshape(shape).copy()
+    # int8: [q int8 rows*cols][scales f32 rows]
+    rows = meta["rows"]
+    cols = int(np.prod(shape)) // rows
+    q = np.frombuffer(raw[: rows * cols], np.int8).reshape(rows, cols)
+    s = np.frombuffer(raw[rows * cols:], np.float32).reshape(rows, 1)
+    return (q.astype(np.float32) * s).reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Messages
+# ---------------------------------------------------------------------------
+
+def pack_message(meta: dict, tree: Any = None, codec: str = "raw") -> bytes:
+    leaves: list[np.ndarray] = []
+    tmpl = _flatten(tree, leaves) if tree is not None else None
+    bufs, metas = [], []
+    for arr in leaves:
+        b, m = _encode_leaf(arr, codec)
+        bufs.append(b)
+        metas.append(m)
+    header = msgpack.packb({
+        "meta": meta, "template": tmpl,
+        "leaves": metas, "buf_lens": [len(b) for b in bufs],
+    }, use_bin_type=True)
+    out = [MAGIC, struct.pack("<I", len(header)), header, *bufs]
+    return b"".join(out)
+
+
+def unpack_message(data: bytes) -> tuple[dict, Any]:
+    assert data[:4] == MAGIC, "bad frame magic"
+    hlen = struct.unpack("<I", data[4:8])[0]
+    header = msgpack.unpackb(data[8:8 + hlen], raw=False)
+    off = 8 + hlen
+    leaves = []
+    for blen, meta in zip(header["buf_lens"], header["leaves"]):
+        leaves.append(_decode_leaf(data[off:off + blen], meta))
+        off += blen
+    tree = (_unflatten(header["template"], leaves)
+            if header["template"] is not None else None)
+    return header["meta"], tree
+
+
+# ---------------------------------------------------------------------------
+# Data-transfer accounting (paper Eq. 1, generalized)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class DataTransfer:
+    """Tracks bytes crossing a link, per direction and per category."""
+    sent: int = 0
+    received: int = 0
+    by_category: dict = field(default_factory=dict)
+
+    def record(self, n: int, direction: str = "sent", category: str = "args") -> None:
+        if direction == "sent":
+            self.sent += n
+        else:
+            self.received += n
+        self.by_category[category] = self.by_category.get(category, 0) + n
+
+    @property
+    def total(self) -> int:
+        return self.sent + self.received
+
+
+def tree_wire_bytes(tree: Any) -> int:
+    leaves: list[np.ndarray] = []
+    _flatten(tree, leaves)
+    return sum(a.nbytes for a in leaves)
+
+
+def eq1_bytes(dims: int, c: float) -> float:
+    """Paper Eq. 1: DT = (2*4) + (1*4) + Dims*4 + (Dims/c)*4 bytes/frame."""
+    return (2 * 4) + (1 * 4) + dims * 4 + (dims / c) * 4

@@ -1,0 +1,231 @@
+"""Transport channels between host and destination nodes.
+
+* ``LoopbackChannel``  — in-process queue pair (tests, same-process demos).
+* ``TCPChannel``       — real sockets with length-prefixed frames (the paper's
+                         Boost-ASIO analogue); ``TCPServer`` runs a
+                         DestinationExecutor behind a listening socket.
+* ``SimulatedChannel`` — loopback + a virtual clock charging the calibrated
+                         link model (latency + bytes/bandwidth + destination
+                         serialization rate).  Used to reproduce the paper's
+                         test-bed numbers on this CPU-only container.
+"""
+from __future__ import annotations
+
+import queue
+import socket
+import struct
+import threading
+import time
+from typing import Callable, Optional
+
+
+class ChannelClosed(Exception):
+    pass
+
+
+class Channel:
+    """Bidirectional message channel (bytes in, bytes out)."""
+
+    def send(self, data: bytes) -> None:
+        raise NotImplementedError
+
+    def recv(self, timeout: Optional[float] = None) -> bytes:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+    # RPC convenience -------------------------------------------------------
+    def request(self, data: bytes, timeout: Optional[float] = None) -> bytes:
+        self.send(data)
+        return self.recv(timeout)
+
+
+# ---------------------------------------------------------------------------
+# Loopback
+# ---------------------------------------------------------------------------
+
+class LoopbackChannel(Channel):
+    def __init__(self, tx: queue.Queue, rx: queue.Queue) -> None:
+        self._tx, self._rx = tx, rx
+        self._closed = False
+
+    @staticmethod
+    def pair() -> tuple["LoopbackChannel", "LoopbackChannel"]:
+        a, b = queue.Queue(), queue.Queue()
+        return LoopbackChannel(a, b), LoopbackChannel(b, a)
+
+    def send(self, data: bytes) -> None:
+        if self._closed:
+            raise ChannelClosed
+        self._tx.put(data)
+
+    def recv(self, timeout: Optional[float] = None) -> bytes:
+        try:
+            data = self._rx.get(timeout=timeout)
+        except queue.Empty:
+            raise TimeoutError("loopback recv timeout")
+        if data is None:
+            raise ChannelClosed
+        return data
+
+    def close(self) -> None:
+        self._closed = True
+        self._tx.put(None)
+
+
+# ---------------------------------------------------------------------------
+# TCP
+# ---------------------------------------------------------------------------
+
+def _send_frame(sock: socket.socket, data: bytes) -> None:
+    sock.sendall(struct.pack("<Q", len(data)) + data)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    chunks = []
+    while n > 0:
+        c = sock.recv(min(n, 1 << 20))
+        if not c:
+            raise ChannelClosed("socket closed")
+        chunks.append(c)
+        n -= len(c)
+    return b"".join(chunks)
+
+
+def _recv_frame(sock: socket.socket) -> bytes:
+    (n,) = struct.unpack("<Q", _recv_exact(sock, 8))
+    return _recv_exact(sock, n)
+
+
+class TCPChannel(Channel):
+    def __init__(self, sock: socket.socket) -> None:
+        self._sock = sock
+        self._lock = threading.Lock()
+
+    @staticmethod
+    def connect(host: str, port: int, timeout: float = 10.0) -> "TCPChannel":
+        sock = socket.create_connection((host, port), timeout=timeout)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        return TCPChannel(sock)
+
+    def send(self, data: bytes) -> None:
+        with self._lock:
+            _send_frame(self._sock, data)
+
+    def recv(self, timeout: Optional[float] = None) -> bytes:
+        self._sock.settimeout(timeout)
+        try:
+            return _recv_frame(self._sock)
+        except socket.timeout:
+            raise TimeoutError("tcp recv timeout")
+
+    def close(self) -> None:
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self._sock.close()
+
+
+class TCPServer:
+    """Accepts connections and feeds frames to a handler: bytes -> bytes."""
+
+    def __init__(self, handler: Callable[[bytes], bytes], host: str = "127.0.0.1",
+                 port: int = 0) -> None:
+        self._handler = handler
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen(16)
+        self.port = self._sock.getsockname()[1]
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._serve, daemon=True)
+
+    def start(self) -> "TCPServer":
+        self._thread.start()
+        return self
+
+    def _serve(self) -> None:
+        self._sock.settimeout(0.2)
+        threads = []
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._sock.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                break
+            t = threading.Thread(target=self._client, args=(conn,), daemon=True)
+            t.start()
+            threads.append(t)
+
+    def _client(self, conn: socket.socket) -> None:
+        conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        try:
+            while not self._stop.is_set():
+                req = _recv_frame(conn)
+                _send_frame(conn, self._handler(req))
+        except (ChannelClosed, OSError):
+            pass
+        finally:
+            conn.close()
+
+    def stop(self) -> None:
+        self._stop.set()
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
+# ---------------------------------------------------------------------------
+# Simulated link (virtual clock)
+# ---------------------------------------------------------------------------
+
+class VirtualClock:
+    """Accumulates simulated seconds, per category."""
+
+    def __init__(self) -> None:
+        self.elapsed: dict[str, float] = {}
+
+    def charge(self, seconds: float, category: str) -> None:
+        self.elapsed[category] = self.elapsed.get(category, 0.0) + seconds
+
+    def total(self) -> float:
+        return sum(self.elapsed.values())
+
+
+class SimulatedChannel(Channel):
+    """Loopback channel that charges a calibrated link model on a virtual
+    clock: t = latency + bytes/bandwidth + bytes/serialize_rate (destination
+    CPU cost, the term that makes the paper's *edge* link slower than its
+    *cloud* link at equal data size — Fig. 9)."""
+
+    def __init__(self, inner: Channel, clock: VirtualClock, *,
+                 bandwidth: float, latency: float, serialize_rate: float,
+                 name: str = "link") -> None:
+        self._inner = inner
+        self.clock = clock
+        self.bandwidth = bandwidth
+        self.latency = latency
+        self.serialize_rate = serialize_rate
+        self.name = name
+
+    def _charge(self, nbytes: int, direction: str) -> None:
+        t = self.latency + nbytes / self.bandwidth
+        if self.serialize_rate > 0:
+            t += nbytes / self.serialize_rate
+        self.clock.charge(t, f"{self.name}.{direction}")
+
+    def send(self, data: bytes) -> None:
+        self._charge(len(data), "send")
+        self._inner.send(data)
+
+    def recv(self, timeout: Optional[float] = None) -> bytes:
+        data = self._inner.recv(timeout)
+        self._charge(len(data), "recv")
+        return data
+
+    def close(self) -> None:
+        self._inner.close()

@@ -1,0 +1,62 @@
+"""Cross-pod collectives with compression (AVEC's slow-link rule on DCN).
+
+``compressed_grad_allreduce`` runs the gradient reduction hierarchy
+explicitly under shard_map: full-precision psum over the fast intra-pod
+axes, int8 quantize → psum → dequantize over the slow `pod` (DCN) axis, with
+host-side error feedback available via ``optim.compression.ErrorFeedback``.
+The wire saving on the DCN hop is 4× (int8 + fp32 row scales); the roofline
+accounting multiplies pod-axis collective bytes by 0.25 when
+``grad_compression`` is enabled."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.optim.compression import compressed_psum
+
+
+def hierarchical_psum(tree, *, fast_axes=("data",), slow_axis="pod",
+                      compress_slow: bool = True):
+    """Call inside shard_map.  psum over fast ICI axes at full precision,
+    then over the slow DCN axis int8-compressed (if enabled)."""
+    out = jax.tree_util.tree_map(
+        lambda x: jax.lax.psum(x, fast_axes), tree)
+    if slow_axis is None:
+        return out
+    if compress_slow:
+        return compressed_psum(out, slow_axis)
+    return jax.tree_util.tree_map(lambda x: jax.lax.psum(x, slow_axis), out)
+
+
+def compressed_grad_allreduce(mesh, grads, *, compress: bool = True):
+    """All-reduce a replicated-layout gradient pytree across every mesh axis,
+    compressing the pod hop.  Grads are assumed batch-reduced per shard
+    already (e.g. produced under shard_map data parallelism)."""
+    axes = mesh.axis_names
+    fast = tuple(a for a in axes if a != "pod")
+    slow = "pod" if "pod" in axes else None
+
+    def f(g):
+        return hierarchical_psum(g, fast_axes=fast, slow_axis=slow,
+                                 compress_slow=compress)
+
+    spec = jax.tree_util.tree_map(lambda _: P(), grads)
+    return jax.experimental.shard_map.shard_map(
+        f, mesh=mesh, in_specs=spec, out_specs=spec, check_rep=False)(grads)
+
+
+def dcn_wire_bytes(tree, compressed: bool) -> int:
+    """Analytic wire accounting for the pod hop (per direction)."""
+    import numpy as np
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        n = int(np.prod(leaf.shape)) if hasattr(leaf, "shape") else 0
+        if compressed:
+            rows = leaf.shape[0] if getattr(leaf, "ndim", 0) >= 2 else 1
+            total += n * 1 + rows * 4          # int8 payload + fp32 scales
+        else:
+            total += n * 4
+    return total

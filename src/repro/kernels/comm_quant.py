@@ -1,0 +1,74 @@
+"""Per-row symmetric int8 quantization as Pallas TPU kernels.
+
+This is the communication-overhead reducer of the framework (the AVEC wire
+format and the compressed cross-pod gradient all-reduce both use it): a
+4x-8x shrink of every tensor that crosses a slow link, with per-row scales
+so the quantization error stays bounded row-wise.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                   # (br, D)
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref):
+    o_ref[...] = (q_ref[...].astype(jnp.float32) * s_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("br", "interpret"))
+def quantize_int8(x, *, br: int = 256, interpret: bool = False):
+    """x: (N, D) -> (q int8 (N, D), scale f32 (N, 1))."""
+    n, D = x.shape
+    br = min(br, n)
+    pad = (-n) % br
+    xf = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    nb = xf.shape[0] // br
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((br, D), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((br, D), lambda i: (i, 0)),
+                   pl.BlockSpec((br, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct(xf.shape, jnp.int8),
+                   jax.ShapeDtypeStruct((xf.shape[0], 1), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(xf)
+    return q[:n], s[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("dtype", "br", "interpret"))
+def dequantize_int8(q, scale, dtype=jnp.float32, *, br: int = 256,
+                    interpret: bool = False):
+    n, D = q.shape
+    br = min(br, n)
+    pad = (-n) % br
+    qf = jnp.pad(q, ((0, pad), (0, 0))) if pad else q
+    sf = jnp.pad(scale, ((0, pad), (0, 0))) if pad else scale
+    nb = qf.shape[0] // br
+    out = pl.pallas_call(
+        _dequant_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((br, D), lambda i: (i, 0)),
+                  pl.BlockSpec((br, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(qf.shape, dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(qf, sf)
+    return out[:n]

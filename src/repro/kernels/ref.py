@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantic ground truth used by the per-kernel allclose sweeps in
+``tests/test_kernels_*.py`` and by the model code paths on backends where the
+Mosaic kernels cannot lower (this CPU container).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# flash_attention: causal GQA attention, layouts (B,H,S,D) / (B,K,S,D)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool = True):
+    """q: (B,H,Sq,D); k,v: (B,K,Sk,D); H % K == 0.  fp32 softmax."""
+    B, H, Sq, D = q.shape
+    K, Sk = k.shape[1], k.shape[2]
+    G = H // K
+    qr = q.reshape(B, K, G, Sq, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("bkgqd,bksd->bkgqs", qr, kf) * (D ** -0.5)
+    if causal:
+        iq = jnp.arange(Sq)[:, None]
+        ik = jnp.arange(Sk)[None, :]
+        # causal alignment: query i attends to keys <= i + (Sk - Sq)
+        mask = ik <= iq + (Sk - Sq)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention: single query token vs long KV with valid-length mask
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k, v, kv_len):
+    """q: (B,K,G,D); k,v: (B,K,S,D); kv_len: (B,) valid lengths.
+    Returns (B,K,G,D)."""
+    B, K, G, D = q.shape
+    S = k.shape[2]
+    qf = q.astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bksd->bkgs", qf, k.astype(jnp.float32)) * (D ** -0.5)
+    valid = jnp.arange(S)[None, :] < kv_len[:, None]          # (B,S)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan: Mamba2 chunked scan (same semantics as models.ssd.ssd_sequential)
+# ---------------------------------------------------------------------------
+
+def ssd_scan(x, dt, A, B, C):
+    """x: (B,S,H,P); dt: (B,S,H) post-softplus; A: (H,) negative;
+    B,C: (B,S,G,N).  Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    from repro.models.ssd import ssd_sequential
+    return ssd_sequential(x, dt, A, B, C)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# comm_quant: per-row symmetric int8 quantization (AVEC wire format / grad
+# compression)
+# ---------------------------------------------------------------------------
+
+def quantize_int8(x):
+    """x: (N, D) -> (q int8 (N,D), scale f32 (N, 1))."""
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)

@@ -1,0 +1,116 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Hardware model (TPU v5e, per assignment):
+  peak bf16 compute : 197 TFLOP/s per chip
+  HBM bandwidth     : 819 GB/s per chip
+  ICI link bandwidth: ~50 GB/s per link
+
+Terms (seconds; cost_analysis() and the partitioned HLO module are both
+per-device, so dividing by per-chip peaks IS the spec's
+``total/(chips x peak)``):
+
+  compute    = HLO_FLOPs_per_device   / peak_FLOP/s
+  memory     = HLO_bytes_per_device   / HBM_bw
+  collective = coll_bytes_per_device  / ICI_link_bw
+
+Collective bytes are parsed from the compiled (partitioned) HLO text: the
+result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op (result-shape convention: for a ring
+all-reduce/all-gather the per-device wire traffic is ~= result bytes x
+2(N-1)/N, i.e. the result size up to a <=2x constant, applied uniformly)."""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+import numpy as np
+
+HW = {
+    "peak_flops": 197e12,     # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,          # B/s per chip
+    "ici_bw": 50e9,           # B/s per link
+    "chip_mem": 16e9,         # v5e HBM per chip
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            n = int(np.prod([int(d) for d in dims.split(",") if d]))
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> tuple[int, dict]:
+    """Returns (total bytes/device, {op_type: {"bytes": int, "count": int}})."""
+    by_type: dict[str, dict] = {}
+    total = 0
+    for m in _COLL_RE.finditer(hlo_text):
+        nbytes = _type_bytes(m.group(1))
+        op = m.group(2)
+        slot = by_type.setdefault(op, {"bytes": 0, "count": 0})
+        slot["bytes"] += nbytes
+        slot["count"] += 1
+        total += nbytes
+    return total, by_type
+
+
+@dataclass
+class RooflineReport:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    model_flops: float
+    useful_ratio: float
+    dominant: str
+    bound_s: float
+
+    def to_dict(self) -> dict:
+        return dict(self.__dict__)
+
+
+def analyze(flops_per_device: float, bytes_per_device: float,
+            coll_bytes_per_device: float, model_flops: float,
+            chips: int) -> RooflineReport:
+    compute_s = flops_per_device / HW["peak_flops"]
+    memory_s = bytes_per_device / HW["hbm_bw"]
+    collective_s = coll_bytes_per_device / HW["ici_bw"]
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    hlo_total = flops_per_device * chips
+    useful = model_flops / hlo_total if hlo_total > 0 else 0.0
+    return RooflineReport(
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        flops_per_device=flops_per_device, bytes_per_device=bytes_per_device,
+        coll_bytes_per_device=coll_bytes_per_device, model_flops=model_flops,
+        useful_ratio=useful, dominant=dominant, bound_s=terms[dominant])
+
+
+def model_flops_6nd(cfg, shape) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); D = tokens processed."""
+    n = cfg.param_count(active_only=True)
+    if shape.kind == "decode":
+        d = shape.global_batch
+    else:
+        d = shape.global_batch * shape.seq_len
+    return 6.0 * n * d

@@ -1,0 +1,70 @@
+"""Serving entrypoint: stand up a destination executor (TCP) or run the
+continuous-batching engine locally.
+
+  # destination node (the "edge/cloud GPU server"):
+  PYTHONPATH=src python -m repro.launch.serve --role destination --port 9000
+
+  # local engine demo:
+  PYTHONPATH=src python -m repro.launch.serve --role local --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch, list_archs, reduced
+from repro.core.executor import DestinationExecutor
+from repro.core.library import make_model_library
+from repro.core.transport import TCPServer
+from repro.models import model as M
+from repro.serving.engine import Request, ServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b", choices=list_archs())
+    ap.add_argument("--role", default="local", choices=["local", "destination"])
+    ap.add_argument("--port", type=int, default=0)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = reduced(get_arch(args.arch))
+    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+
+    if args.role == "destination":
+        lib = make_model_library(cfg, max_cache_len=args.max_len)
+        ex = DestinationExecutor({"lm": lib}, name=f"{args.arch}-dest")
+        server = TCPServer(ex.handle, port=args.port).start()
+        print(f"destination executor for {args.arch} on port {server.port} "
+              f"(ctrl-c to stop)")
+        try:
+            while True:
+                time.sleep(1)
+        except KeyboardInterrupt:
+            server.stop()
+        return
+
+    eng = ServingEngine(cfg, params, max_batch=args.max_batch,
+                        max_len=args.max_len)
+    rng = np.random.default_rng(args.seed)
+    for i in range(args.requests):
+        eng.submit(Request(f"r{i}",
+                           rng.integers(0, cfg.vocab_size,
+                                        rng.integers(4, 16)).tolist(),
+                           max_new_tokens=16))
+    t0 = time.perf_counter()
+    out = eng.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(v) for v in out.values())
+    print(f"{args.requests} requests, {toks} tokens in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s, {eng.steps} engine ticks)")
+
+
+if __name__ == "__main__":
+    main()

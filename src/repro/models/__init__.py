@@ -1,0 +1,5 @@
+from repro.models.model import (  # noqa: F401
+    param_specs, init_params, abstract_params, forward_hidden,
+    logits_from_hidden, loss_fn, prefill, decode_step, init_cache,
+    input_specs, abstract_cache,
+)

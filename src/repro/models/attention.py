@@ -1,0 +1,230 @@
+"""GQA attention: train / prefill / decode paths.
+
+Two implementations, selected by ``cfg.attn_impl``:
+
+* ``naive``   — materializes the full (B, H, S, T) score tensor (the
+  paper-faithful simple baseline).
+* ``blocked`` — lax.scan over query blocks; peak activation memory drops by
+  S/block_q (flash-style memory behaviour in pure jnp; the Pallas kernel in
+  ``repro.kernels.flash_attention`` is the TPU-native version of this path).
+
+KV caches are plain pytrees: {"k": (B, S_max, K, hd), "v": (B, S_max, K, hd)}.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope
+from repro.models.params import ParamSpec
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+def attn_specs(cfg) -> dict:
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    specs = {
+        "wq": ParamSpec((d, H, hd), ("embed", "heads", "head_dim"), "normal", d ** -0.5),
+        "wk": ParamSpec((d, K, hd), ("embed", "kv_heads", "head_dim"), "normal", d ** -0.5),
+        "wv": ParamSpec((d, K, hd), ("embed", "kv_heads", "head_dim"), "normal", d ** -0.5),
+        "wo": ParamSpec((H, hd, d), ("heads", "head_dim", "embed"), "normal",
+                        (H * hd) ** -0.5),
+    }
+    if cfg.use_bias:
+        specs["bq"] = ParamSpec((H, hd), ("heads", "head_dim"), "zeros")
+        specs["bk"] = ParamSpec((K, hd), ("kv_heads", "head_dim"), "zeros")
+        specs["bv"] = ParamSpec((K, hd), ("kv_heads", "head_dim"), "zeros")
+        specs["bo"] = ParamSpec((d,), ("embed",), "zeros")
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Projections
+# ---------------------------------------------------------------------------
+
+def _project_q(cfg, p, x, positions, rope: bool):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+    return q
+
+
+def _project_kv(cfg, p, x, positions, rope: bool):
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if "bk" in p:
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if rope:
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def _out_proj(p, o):
+    B, S = o.shape[:2]
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+    if "bo" in p:
+        y = y + p["bo"].astype(o.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Core scaled-dot-product attention (GQA), mask by positions
+# ---------------------------------------------------------------------------
+
+def _sdpa_naive(q, k, v, q_pos, kv_pos, causal: bool, mixed: bool = False):
+    """q: (B,S,H,hd); k/v: (B,T,K,hd); q_pos: (B,S) | None; kv_pos: (B,T) | None.
+
+    ``mixed=False`` (paper-faithful baseline): upcast operands to fp32 before
+    the score/value matmuls — simple but doubles the bytes moved for bf16
+    KV.  ``mixed=True`` (hillclimb lever ``cfg.attn_mixed``): keep operands
+    in their storage dtype and accumulate in fp32 via
+    ``preferred_element_type`` — same numerics for the reduction, half the
+    HBM traffic on the KV read path."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = hd ** -0.5
+    if mixed:
+        qr = q.reshape(B, S, K, G, hd)
+        scores = jnp.einsum("bskgh,btkh->bkgst", qr, k,
+                            preferred_element_type=jnp.float32) * scale
+    else:
+        qr = q.reshape(B, S, K, G, hd).astype(jnp.float32)
+        scores = jnp.einsum("bskgh,btkh->bkgst", qr,
+                            k.astype(jnp.float32)) * scale   # (B,K,G,S,T)
+    if causal:
+        mask = kv_pos[:, None, :] <= q_pos[:, :, None]        # (B,S,T)
+        scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    if mixed:
+        o = jnp.einsum("bkgst,btkh->bskgh", probs.astype(q.dtype), v,
+                       preferred_element_type=jnp.float32)
+    else:
+        o = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32))
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def _sdpa_blocked(q, k, v, q_pos, kv_pos, causal: bool, block_q: int,
+                  unroll: bool = False, mixed: bool = False):
+    """lax.scan over query blocks: peak score memory B*K*G*block_q*T."""
+    B, S, H, hd = q.shape
+    if S <= block_q:
+        return _sdpa_naive(q, k, v, q_pos, kv_pos, causal, mixed)
+    pad = (-S) % block_q
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=-1)
+    nb = q.shape[1] // block_q
+    qb = q.reshape(B, nb, block_q, H, hd).transpose(1, 0, 2, 3, 4)
+    pb = q_pos.reshape(B, nb, block_q).transpose(1, 0, 2)
+
+    def body(_, xs):
+        qi, pi = xs
+        oi = _sdpa_naive(qi, k, v, pi, kv_pos, causal, mixed)
+        return None, oi
+
+    _, ob = jax.lax.scan(body, None, (qb, pb), unroll=True if unroll else 1)
+    o = ob.transpose(1, 0, 2, 3, 4).reshape(B, nb * block_q, H, hd)
+    return o[:, :S]
+
+
+def sdpa(cfg, q, k, v, q_pos, kv_pos, causal: bool):
+    if cfg.attn_impl == "blocked" and causal:
+        return _sdpa_blocked(q, k, v, q_pos, kv_pos, causal, cfg.attn_block_q,
+                             unroll=cfg.unroll_blocks, mixed=cfg.attn_mixed)
+    return _sdpa_naive(q, k, v, q_pos, kv_pos, causal, cfg.attn_mixed)
+
+
+# ---------------------------------------------------------------------------
+# Self-attention entry points
+# ---------------------------------------------------------------------------
+
+def self_attention(cfg, p, x, positions, *, rope: bool = True, causal: bool = True):
+    """Full self-attention (train path; bidirectional for encoders).  x: (B,S,d)."""
+    q = _project_q(cfg, p, x, positions, rope)
+    k, v = _project_kv(cfg, p, x, positions, rope)
+    o = sdpa(cfg, q, k, v, positions, positions, causal=causal)
+    return _out_proj(p, o)
+
+
+def self_attention_prefill(cfg, p, x, positions, cache_len: int, *, rope: bool = True):
+    """Causal self-attention that also builds the KV cache (padded to
+    cache_len).  Returns (out, cache)."""
+    B, S, _ = x.shape
+    q = _project_q(cfg, p, x, positions, rope)
+    k, v = _project_kv(cfg, p, x, positions, rope)
+    o = sdpa(cfg, q, k, v, positions, positions, causal=True)
+    pad = cache_len - S
+    kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return _out_proj(p, o), {"k": kc, "v": vc}
+
+
+def self_attention_decode(cfg, p, x, cache, pos, *, rope: bool = True):
+    """One-token decode.  x: (B,1,d); cache k/v: (B,S_max,K,hd); pos: () int32
+    shared write index, or (B,) per-row indices (continuous batching)."""
+    B = x.shape[0]
+    S_max = cache["k"].shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    per_row = pos.ndim == 1
+    positions = pos[:, None] if per_row else jnp.full((B, 1), pos, jnp.int32)
+    q = _project_q(cfg, p, x, positions, rope)
+    k_new, v_new = _project_kv(cfg, p, x, positions, rope)
+    if per_row:
+        rows = jnp.arange(B)
+        k = cache["k"].at[rows, pos].set(k_new[:, 0].astype(cache["k"].dtype))
+        v = cache["v"].at[rows, pos].set(v_new[:, 0].astype(cache["v"].dtype))
+    else:
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, pos, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, pos, 0, 0))
+    kv_pos = jnp.broadcast_to(jnp.arange(S_max, dtype=jnp.int32)[None], (B, S_max))
+    o = _sdpa_naive(q, k, v, positions, kv_pos, causal=True, mixed=cfg.attn_mixed)
+    return _out_proj(p, o), {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder, llama-vision image layers)
+# ---------------------------------------------------------------------------
+
+def cross_attention(cfg, p, x, context):
+    """Bidirectional cross-attention; context: (B, Tc, d)."""
+    B, S, _ = x.shape
+    zeros_q = jnp.zeros((B, S), jnp.int32)
+    zeros_k = jnp.zeros((B, context.shape[1]), jnp.int32)
+    q = _project_q(cfg, p, x, zeros_q, rope=False)
+    k, v = _project_kv(cfg, p, context, zeros_k, rope=False)
+    o = _sdpa_naive(q, k, v, None, None, causal=False, mixed=cfg.attn_mixed)
+    return _out_proj(p, o)
+
+
+def cross_attention_cached(cfg, p, x, cache):
+    """Decode-time cross-attention against precomputed context KV."""
+    B, S, _ = x.shape
+    zeros_q = jnp.zeros((B, S), jnp.int32)
+    q = _project_q(cfg, p, x, zeros_q, rope=False)
+    o = _sdpa_naive(q, cache["cross_k"], cache["cross_v"], None, None,
+                    causal=False, mixed=cfg.attn_mixed)
+    return _out_proj(p, o)
+
+
+def cross_kv(cfg, p, context):
+    zeros_k = jnp.zeros((context.shape[0], context.shape[1]), jnp.int32)
+    k, v = _project_kv(cfg, p, context, zeros_k, rope=False)
+    return {"cross_k": k, "cross_v": v}
+
+
+def init_attn_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((batch, max_len, K, hd), dtype),
+            "v": jnp.zeros((batch, max_len, K, hd), dtype)}

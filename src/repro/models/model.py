@@ -1,0 +1,197 @@
+"""Unified model API — family dispatch.
+
+Functions (all pure; cfg is static):
+  param_specs(cfg)                       -> ParamSpec tree
+  init_params(cfg, rng)                  -> concrete params
+  abstract_params(cfg)                   -> ShapeDtypeStruct params (dry-run)
+  forward_hidden(cfg, params, batch)     -> (h, aux)
+  logits(cfg, params, h)                 -> (B,S,V) fp32
+  loss_fn(cfg, params, batch)            -> (loss, metrics)
+  prefill(cfg, params, batch, cache_len) -> (last_logits, cache)
+  decode_step(cfg, params, cache, batch) -> (logits, cache)
+  init_cache(cfg, batch, max_len)        -> cache pytree
+  input_specs(cfg, shape)                -> ShapeDtypeStruct batch (dry-run)
+
+Batch dicts: {"tokens": (B,S) int32, "targets": (B,S) int32} plus family
+extras — vlm: "vision" (B,Tv,d); encdec: "frames" (B,F,d); decode batches:
+{"tokens": (B,1), "pos": () int32} (+ frozen "vision" context for vlm).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as ed
+from repro.models import params as pm
+from repro.models import transformer as tf
+from repro.models.layers import unembed
+
+IGNORE = -1  # target id excluded from the loss
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg):
+    if cfg.family == "encdec":
+        return ed.encdec_specs(cfg)
+    return tf.lm_specs(cfg)
+
+
+def init_params(cfg, rng):
+    return pm.init_params(param_specs(cfg), rng, jnp.dtype(cfg.param_dtype))
+
+
+def abstract_params(cfg):
+    return pm.abstract_params(param_specs(cfg), jnp.dtype(cfg.param_dtype))
+
+
+# ---------------------------------------------------------------------------
+# Forward / losses
+# ---------------------------------------------------------------------------
+
+def _context(cfg, batch):
+    if cfg.family == "vlm":
+        return batch["vision"]
+    return None
+
+
+def forward_hidden(cfg, params, batch):
+    if cfg.family == "encdec":
+        enc = ed.encode(cfg, params, batch["frames"])
+        return ed.dec_hidden(cfg, params, batch["tokens"], enc), jnp.zeros((), jnp.float32)
+    h, aux = tf.lm_hidden(cfg, params, batch["tokens"], context=_context(cfg, batch))
+    return h, aux
+
+
+def logits_from_hidden(cfg, params, h):
+    return unembed(cfg, params["embed"], h)
+
+
+def _xent_full(cfg, params, h, targets):
+    lg = logits_from_hidden(cfg, params, h)              # (B,S,Vp) fp32
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    tgt = jnp.clip(targets, 0, cfg.padded_vocab - 1)
+    gold = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = (targets != IGNORE).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _xent_chunked(cfg, params, h, targets):
+    """Streaming-logsumexp cross-entropy over vocab chunks: never materializes
+    the (B,S,V) logits tensor.  Beyond-paper memory optimization (hillclimb
+    lever ``cfg.xent_impl``)."""
+    emb = params["embed"]
+    W = emb["tok"] if cfg.tie_embeddings else emb["head"]      # (V,d) or (d,V)
+    Vp, d = cfg.padded_vocab, cfg.d_model
+    ck = cfg.xent_chunk
+    assert Vp % ck == 0, (Vp, ck)
+    n_chunks = Vp // ck
+    B, S, _ = h.shape
+    hf = h.astype(jnp.float32)
+    tgt = jnp.clip(targets, 0, Vp - 1)
+
+    def body(carry, i):
+        m, s, gold = carry
+        c0 = i * ck
+        if cfg.tie_embeddings:
+            Wc = jax.lax.dynamic_slice_in_dim(W, c0, ck, 0).astype(jnp.float32)
+            lg = jnp.einsum("bsd,vd->bsv", hf, Wc)
+        else:
+            Wc = jax.lax.dynamic_slice_in_dim(W, c0, ck, 1).astype(jnp.float32)
+            lg = jnp.einsum("bsd,dv->bsv", hf, Wc)
+        col = c0 + jnp.arange(ck)
+        lg = jnp.where((col >= cfg.vocab_size)[None, None, :], -1e30, lg)
+        mc = jnp.max(lg, axis=-1)
+        m_new = jnp.maximum(m, mc)
+        s = s * jnp.exp(m - m_new) + jnp.sum(jnp.exp(lg - m_new[..., None]), axis=-1)
+        in_rng = (tgt >= c0) & (tgt < c0 + ck)
+        idx = jnp.clip(tgt - c0, 0, ck - 1)
+        g = jnp.take_along_axis(lg, idx[..., None], axis=-1)[..., 0]
+        gold = jnp.where(in_rng, g, gold)
+        return (m_new, s, gold), None
+
+    init = (jnp.full((B, S), -1e30, jnp.float32), jnp.zeros((B, S), jnp.float32),
+            jnp.zeros((B, S), jnp.float32))
+    (m, s, gold), _ = jax.lax.scan(body, init, jnp.arange(n_chunks),
+                                   unroll=True if cfg.unroll_blocks else 1)
+    lse = m + jnp.log(s)
+    nll = lse - gold
+    mask = (targets != IGNORE).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(cfg, params, batch):
+    h, aux = forward_hidden(cfg, params, batch)
+    if cfg.xent_impl == "chunked":
+        xent = _xent_chunked(cfg, params, h, batch["targets"])
+    else:
+        xent = _xent_full(cfg, params, h, batch["targets"])
+    loss = xent + aux
+    return loss, {"loss": loss, "xent": xent, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving paths
+# ---------------------------------------------------------------------------
+
+def prefill(cfg, params, batch, cache_len: int, cache_dtype=jnp.bfloat16):
+    """Returns (last-token logits (B,1,V), cache)."""
+    if cfg.family == "encdec":
+        enc = ed.encode(cfg, params, batch["frames"])
+        h, cache = ed.dec_prefill(cfg, params, batch["tokens"], enc, cache_len,
+                                  cache_dtype)
+    else:
+        h, cache = tf.lm_prefill(cfg, params, batch["tokens"], cache_len,
+                                 context=_context(cfg, batch),
+                                 cache_dtype=cache_dtype)
+    lg = logits_from_hidden(cfg, params, h[:, -1:])
+    return lg, cache
+
+
+def decode_step(cfg, params, cache, batch):
+    """batch: {"tokens": (B,1), "pos": ()} (+ "vision" context for vlm).
+    Returns (logits (B,1,V), new cache)."""
+    if cfg.family == "encdec":
+        h, cache = ed.dec_step(cfg, params, cache, batch["tokens"], batch["pos"])
+    else:
+        h, cache = tf.lm_decode_step(cfg, params, cache, batch["tokens"],
+                                     batch["pos"], context=_context(cfg, batch))
+    return logits_from_hidden(cfg, params, h), cache
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    if cfg.family == "encdec":
+        return ed.encdec_init_cache(cfg, batch, max_len, dtype)
+    return tf.lm_init_cache(cfg, batch, max_len, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs (no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg, shape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32, cdt = jnp.int32, jnp.dtype(cfg.compute_dtype)
+    if shape.kind == "train":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                 "targets": jax.ShapeDtypeStruct((B, S), i32)}
+    elif shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    else:  # decode: one new token against a seq_len-deep cache
+        batch = {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+                 "pos": jax.ShapeDtypeStruct((), i32)}
+    if cfg.family == "vlm":
+        batch["vision"] = jax.ShapeDtypeStruct((B, cfg.num_vision_tokens,
+                                                cfg.d_model), cdt)
+    if cfg.family == "encdec" and shape.kind != "decode":
+        batch["frames"] = jax.ShapeDtypeStruct((B, cfg.num_audio_frames,
+                                                cfg.d_model), cdt)
+    return batch
+
+
+def abstract_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, dtype))

@@ -1,0 +1,142 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-bounded sort dispatch.
+
+Dispatch strategy (TPU-native adaptation of GShard/Switch): tokens are routed
+top-k, assignments are stably sorted by expert id, each assignment gets a
+position-in-expert via a cumulative-count subtraction, assignments beyond
+per-expert ``capacity`` are dropped, and rows are scattered into an
+(..., E, C, d) buffer that feeds batched per-expert GEMMs — no (T, E, C)
+one-hot dispatch tensor is ever materialized.
+
+Two dispatch scopes, selected by ``cfg.moe_sharded_dispatch``:
+
+* ``False`` (baseline) — one GLOBAL dispatch group over all B*S tokens.
+  Under GSPMD with tokens sharded over `data` and experts over `model`, the
+  scatter into the global buffer resolves to an all-reduce of the whole
+  (E, C, d) buffer across `data` (measured: 15 TB/device for
+  moonshot×train_4k) — the paper-faithful naive baseline.
+* ``True`` — GShard-style *grouped* dispatch: every batch row is its own
+  dispatch group with local capacity, so buffer slots are owned by exactly
+  one data shard and the dispatch is communication-free by construction;
+  expert GEMMs run on (group→data, expert→model)-sharded buffers.  Capacity
+  dropping then acts per group (GShard's actual semantics).
+
+Expert weights carry the "experts" logical axis and shard over the model mesh
+axis (expert parallelism).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.mlp import mlp_specs, apply_mlp
+from repro.models.params import ParamSpec
+
+
+def moe_specs(cfg) -> dict:
+    m = cfg.moe
+    d, E, f = cfg.d_model, m.num_experts, m.d_ff
+    specs = {
+        "router": ParamSpec((d, E), ("embed", None), "normal", d ** -0.5,
+                            dtype=jnp.float32),
+        "w_gate": ParamSpec((E, d, f), ("experts", "embed", "expert_mlp"),
+                            "normal", d ** -0.5),
+        "w_up": ParamSpec((E, d, f), ("experts", "embed", "expert_mlp"),
+                          "normal", d ** -0.5),
+        "w_down": ParamSpec((E, f, d), ("experts", "expert_mlp", "embed"),
+                            "normal", f ** -0.5),
+    }
+    if m.dense_residual:
+        specs["dense"] = mlp_specs(cfg)
+    return specs
+
+
+def _capacity(cfg, n_tokens: int) -> int:
+    m = cfg.moe
+    c = int(n_tokens * m.top_k / m.num_experts * m.capacity_factor)
+    return max(8, -(-c // 8) * 8)  # round up to 8, floor 8
+
+
+def _constrain(x, *entries):
+    """Best-effort with_sharding_constraint: a bare PartitionSpec resolves
+    against the ambient mesh context; outside one (CPU smoke paths) the call
+    raises and we fall back to a no-op."""
+    import jax.sharding as js
+    try:
+        return jax.lax.with_sharding_constraint(x, js.PartitionSpec(*entries))
+    except Exception:  # noqa: BLE001 — sharding hints must never break math
+        return x
+
+
+def apply_moe(cfg, p, x):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    E, k = m.num_experts, m.top_k
+    grouped = cfg.moe_sharded_dispatch
+    G = B if grouped else 1                   # dispatch groups
+    T = S if grouped else B * S               # tokens per group
+    xg = x.reshape(G, T, d)
+
+    # --- routing (fp32) ----------------------------------------------------
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                    # (G,T,E)
+    top_p, top_e = jax.lax.top_k(probs, k)                     # (G,T,k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # load-balancing aux loss (Switch), computed over ALL tokens
+    me = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    assign = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0)
+    fe = assign / (G * T * k)
+    aux = m.router_aux_weight * E * jnp.sum(fe * me)
+
+    # --- capacity-bounded sort dispatch (vectorized over groups) -----------
+    C = _capacity(cfg, T)
+    flat_e = top_e.reshape(G, T * k)                           # (G,TK)
+    sort_idx = jnp.argsort(flat_e, axis=-1, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, sort_idx, axis=-1)
+    counts = jnp.zeros((G, E), jnp.int32).at[
+        jnp.arange(G)[:, None], flat_e].add(1)
+    starts = jnp.concatenate(
+        [jnp.zeros((G, 1), jnp.int32), jnp.cumsum(counts, axis=-1)[:, :-1]],
+        axis=-1)                                               # (G,E)
+    pos_in_e = (jnp.arange(T * k, dtype=jnp.int32)[None]
+                - jnp.take_along_axis(starts, sorted_e, axis=-1))
+    keep = pos_in_e < C
+    dest = sorted_e * C + jnp.where(keep, pos_in_e, 0)         # (G,TK)
+    src_tok = sort_idx // k                                    # (G,TK)
+
+    # dropped entries are zeroed and .add'ed at slot 0 of their expert, so
+    # they cannot clobber a kept row (a .set with colliding indices would).
+    # NOTE: constraining rows/buf BEFORE the scatter was tried and strongly
+    # refuted (3.4x more collective traffic — see EXPERIMENTS.md §Perf
+    # moonshot iter-3); only the post-scatter constraint below helps.
+    rows = (jnp.take_along_axis(xg, src_tok[..., None], axis=1)
+            * keep[..., None].astype(xg.dtype))                # (G,TK,d)
+    buf = jnp.zeros((G, E * C, d), xg.dtype).at[
+        jnp.arange(G)[:, None], dest].add(rows)
+    buf = buf.reshape(G, E, C, d)
+    if grouped:
+        # groups -> data, experts -> model: the expert GEMMs below are local
+        buf = _constrain(buf, "data", "model", None, None)
+
+    # --- per-expert SwiGLU (batched GEMMs over group x expert) -------------
+    dt = buf.dtype
+    g_ = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"].astype(dt))
+    u_ = jnp.einsum("gecd,edf->gecf", buf, p["w_up"].astype(dt))
+    h = jax.nn.silu(g_) * u_
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dt))
+    if grouped:
+        out_buf = _constrain(out_buf, "data", "model", None, None)
+    out_flat = out_buf.reshape(G, E * C, d)
+
+    # --- combine -------------------------------------------------------------
+    w = (jnp.take_along_axis(top_p.reshape(G, T * k), sort_idx, axis=-1)
+         * keep).astype(xg.dtype)                              # (G,TK)
+    contrib = jnp.take_along_axis(out_flat, dest[..., None], axis=1) \
+        * w[..., None]
+    y = jnp.zeros((G, T, d), xg.dtype).at[
+        jnp.arange(G)[:, None], src_tok].add(contrib)
+
+    if m.dense_residual:
+        y = y + apply_mlp(cfg, p["dense"], xg)
+    return y.reshape(B, S, d), aux

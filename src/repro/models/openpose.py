@@ -1,0 +1,95 @@
+"""OpenPose-lite: a runnable miniature of the paper's workload.
+
+The paper offloads OpenPose's Caffe backbone (VGG-19 feature stem + iterative
+part-affinity-field / heatmap stages, ~160 GFLOPs at 368x656).  This module
+implements a faithful-in-structure, reduced-width version in pure JAX so that
+the AVEC offload path can be demonstrated end-to-end on CPU: a conv stem, two
+prediction stages, and the paper's output geometry (feature maps at stride 8,
+so output elements = input_dims / c with c ≈ 3.37 matching Eq. 1).
+
+Host/destination split (paper §V.4): the *backbone* runs at the destination;
+frame assembly + pose rendering stay on the host.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class OpenPoseLite(NamedTuple):
+    channels: int = 32          # reduced from VGG 128/256/512
+    stages: int = 2             # paper model has 6 PAF + 2 heatmap stages
+    n_parts: int = 19           # COCO keypoints + background
+    n_pafs: int = 38
+
+
+def op_param_specs(net: OpenPoseLite):
+    from repro.models.params import ParamSpec
+    C = net.channels
+    specs = {
+        # stem: 3 stride-2 convs -> stride 8 feature map (as VGG pool3)
+        "stem1": {"w": ParamSpec((3, 3, 3, C), (None, None, None, None), "normal", 0.05)},
+        "stem2": {"w": ParamSpec((3, 3, C, C), (None, None, None, None), "normal", 0.05)},
+        "stem3": {"w": ParamSpec((3, 3, C, C), (None, None, None, None), "normal", 0.05)},
+    }
+    in_c = C
+    for s in range(net.stages):
+        specs[f"stage{s}_a"] = {"w": ParamSpec((3, 3, in_c, C), (None,) * 4, "normal", 0.05)}
+        specs[f"stage{s}_b"] = {"w": ParamSpec(
+            (1, 1, C, net.n_parts + net.n_pafs), (None,) * 4, "normal", 0.05)}
+        in_c = C + net.n_parts + net.n_pafs   # stage input = features ++ prev belief
+    return specs
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def op_forward(net: OpenPoseLite, params, frames):
+    """frames: (B, H, W, 3) float32 -> beliefs (B, H/8, W/8, parts+pafs)."""
+    h = jax.nn.relu(_conv(frames, params["stem1"]["w"], 2))
+    h = jax.nn.relu(_conv(h, params["stem2"]["w"], 2))
+    feat = jax.nn.relu(_conv(h, params["stem3"]["w"], 2))
+    belief = None
+    x = feat
+    for s in range(net.stages):
+        h = jax.nn.relu(_conv(x, params[f"stage{s}_a"]["w"]))
+        belief = _conv(h, params[f"stage{s}_b"]["w"])
+        x = jnp.concatenate([feat, belief], axis=-1)
+    return belief
+
+
+def op_flops(net: OpenPoseLite, H: int, W: int) -> float:
+    """Analytic forward FLOPs of OpenPose-lite at an HxW input."""
+    C = net.channels
+    f = 0.0
+    f += 2 * (H // 2) * (W // 2) * 9 * 3 * C
+    f += 2 * (H // 4) * (W // 4) * 9 * C * C
+    f += 2 * (H // 8) * (W // 8) * 9 * C * C
+    h8, w8 = H // 8, W // 8
+    in_c = C
+    for _ in range(net.stages):
+        f += 2 * h8 * w8 * 9 * in_c * C
+        f += 2 * h8 * w8 * 1 * C * (net.n_parts + net.n_pafs)
+        in_c = C + net.n_parts + net.n_pafs
+    return f
+
+
+def render_pose(frames, beliefs):
+    """Host-side 'rendering' kernel stand-in (paper: renderPoseCoco stays on
+    the host): upsample argmax heatmap onto the frame."""
+    B, H, W, _ = frames.shape
+    hm = beliefs[..., :19]
+    peak = jnp.max(hm, axis=-1)
+    up = jax.image.resize(peak, (B, H, W), "nearest")
+    return frames.at[..., 0].add(up.astype(frames.dtype))
+
+
+def make_frames(batch: int, h: int = 368, w: int = 656, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((batch, h, w, 3), dtype=np.float32))

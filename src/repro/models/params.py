@@ -1,0 +1,91 @@
+"""Parameter specification trees.
+
+Every model module declares its parameters as a nested dict of ``ParamSpec``
+(shape, dtype, logical sharding axes, initializer).  The same spec tree drives
+
+* concrete initialization (``init_params``),
+* abstract lowering for the multi-pod dry-run (``abstract_params``), and
+* NamedSharding derivation (``repro.distributed.sharding.specs_to_shardings``).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ParamSpec(NamedTuple):
+    shape: tuple
+    axes: tuple            # logical axis names, len == len(shape); None entries replicate
+    init: str = "normal"   # normal | zeros | ones
+    scale: float = 0.02    # stddev for "normal"
+    dtype: Optional[Any] = None  # override model param_dtype (e.g. fp32 norms)
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _tree_map_specs(fn, specs):
+    return jax.tree_util.tree_map(fn, specs, is_leaf=is_spec)
+
+
+def stack_specs(specs, n: int, axis_name: str = "layers"):
+    """Prepend a stacking dimension (for scan-over-layers parameter stacks)."""
+    def f(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((n,) + tuple(s.shape), (axis_name,) + tuple(s.axes),
+                         s.init, s.scale, s.dtype)
+    return _tree_map_specs(f, specs)
+
+
+def abstract_params(specs, param_dtype=jnp.bfloat16):
+    def f(s: ParamSpec):
+        return jax.ShapeDtypeStruct(tuple(s.shape), s.dtype or param_dtype)
+    return _tree_map_specs(f, specs)
+
+
+def param_axes(specs):
+    """Tree of logical-axis tuples, mirroring the spec tree."""
+    return _tree_map_specs(lambda s: tuple(s.axes), specs)
+
+
+def init_params(specs, rng, param_dtype=jnp.bfloat16):
+    """Materialize a spec tree.  Deterministic per-path RNG folding so that
+    parameter values are independent of traversal order."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(specs, is_leaf=is_spec)
+    leaves = []
+    for path, spec in flat:
+        dtype = spec.dtype or param_dtype
+        if spec.init == "zeros":
+            leaves.append(jnp.zeros(spec.shape, dtype))
+        elif spec.init == "ones":
+            leaves.append(jnp.ones(spec.shape, dtype))
+        elif spec.init == "normal":
+            key = jax.random.fold_in(rng, _path_seed(path))
+            leaves.append((jax.random.normal(key, spec.shape, jnp.float32)
+                           * spec.scale).astype(dtype))
+        elif spec.init == "mamba_dt_bias":
+            # dt bias such that softplus(dt_bias) spans [1e-3, 1e-1] (Mamba init)
+            n = int(np.prod(spec.shape))
+            dt = np.exp(np.linspace(np.log(1e-3), np.log(1e-1), max(n, 1)))
+            inv = dt + np.log(-np.expm1(-dt))
+            leaves.append(jnp.asarray(inv.reshape(spec.shape), dtype))
+        elif spec.init == "mamba_a_log":
+            n_last = spec.shape[-1]
+            a = np.broadcast_to(np.arange(1, n_last + 1, dtype=np.float32), spec.shape)
+            leaves.append(jnp.asarray(np.log(a), dtype))
+        else:
+            raise ValueError(f"unknown init {spec.init!r}")
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _path_seed(path) -> int:
+    import hashlib
+    s = jax.tree_util.keystr(path).encode()
+    return int.from_bytes(hashlib.sha256(s).digest()[:4], "little")
+
+
+def cast_tree(tree, dtype):
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), tree)

@@ -1,0 +1,125 @@
+"""Mamba2 state-space duality (SSD) scan algorithms.
+
+``ssd_chunked``    — matmul-rich chunked algorithm (Mamba2 §6): quadratic
+                     attention-like intra-chunk term + linear inter-chunk
+                     recurrence.  This is the MXU-friendly train/prefill path;
+                     the Pallas kernel in ``repro.kernels.ssd_scan`` implements
+                     the same schedule with explicit VMEM tiling.
+``ssd_sequential`` — per-timestep linear recurrence (the semantic oracle, and
+                     the shape of the single-token decode update).
+``ssd_step``       — one decode step.
+
+Conventions: x (B,S,H,P), dt (B,S,H) [post-softplus], A (H,) [negative],
+B/C (B,S,G,N) with G groups broadcast over H heads.  All math in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _rep(t, rep: int, axis: int):
+    return jnp.repeat(t, rep, axis=axis) if rep > 1 else t
+
+
+def ssd_sequential(x, dt, A, B, C, state0=None):
+    """Oracle: step-by-step recurrence.  Returns (y (B,S,H,P), final_state
+    (B,H,P,N))."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = B.astype(jnp.float32), C.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    state = (jnp.zeros((b, h, p, n), jnp.float32) if state0 is None
+             else state0.astype(jnp.float32))
+
+    def step(st, inp):
+        x_t, dt_t, B_t, C_t = inp                       # (b,h,p) (b,h) (b,g,n) x2
+        da = jnp.exp(dt_t * Af)                         # (b,h)
+        Bh = _rep(B_t, rep, 1)                          # (b,h,n)
+        Ch = _rep(C_t, rep, 1)
+        st = st * da[..., None, None] + jnp.einsum("bh,bhn,bhp->bhpn", dt_t, Bh, x_t)
+        y = jnp.einsum("bhn,bhpn->bhp", Ch, st)
+        return st, y
+
+    xs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+          Bf.transpose(1, 0, 2, 3), Cf.transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, state0=None):
+    """Chunked SSD (Mamba2 Listing 1).  Returns (y, final_state)."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    pad = (-s) % chunk
+    xf = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, pad), (0, 0), (0, 0)))
+    dtf = jnp.pad(dt.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    Bf = jnp.pad(B.astype(jnp.float32), ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Cf = jnp.pad(C.astype(jnp.float32), ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Af = A.astype(jnp.float32)
+    sp = s + pad
+    nc, L = sp // chunk, chunk
+
+    xc = xf.reshape(b, nc, L, h, p)
+    dtc = dtf.reshape(b, nc, L, h)
+    Bc = Bf.reshape(b, nc, L, g, n)
+    Cc = Cf.reshape(b, nc, L, g, n)
+
+    dA = dtc * Af                                       # (b,nc,L,h)
+    a = jnp.cumsum(dA, axis=2).transpose(0, 1, 3, 2)    # (b,nc,h,L) inclusive
+
+    # ---- intra-chunk (quadratic, attention-like) -------------------------
+    CB = jnp.einsum("bclgn,bcmgn->bcglm", Cc, Bc)       # (b,nc,g,L,L)
+    CB = _rep(CB, rep, 2)                               # (b,nc,h,L,L)
+    diff = a[..., :, None] - a[..., None, :]            # (b,nc,h,L,L)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(mask, jnp.exp(diff), 0.0)
+    scores = CB * decay * dtc.transpose(0, 1, 3, 2)[..., None, :]
+    y_intra = jnp.einsum("bchlm,bcmhp->bclhp", scores, xc)
+
+    # ---- per-chunk final states ------------------------------------------
+    decay_states = jnp.exp(a[..., -1:] - a)             # (b,nc,h,L)
+    Bh = _rep(Bc, rep, 3)                               # (b,nc,L,h,n)
+    w = (decay_states.transpose(0, 1, 3, 2) * dtc)      # (b,nc,L,h)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn", Bh, w, xc)
+
+    # ---- inter-chunk linear recurrence ------------------------------------
+    chunk_decay = jnp.exp(a[..., -1])                   # (b,nc,h)
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if state0 is None
+            else state0.astype(jnp.float32))
+
+    def step(st, inp):
+        st_c, dec_c = inp
+        new = st * dec_c[..., None, None] + st_c
+        return new, st                                  # emit state ENTERING chunk
+
+    final, prev = jax.lax.scan(
+        step, init, (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev = prev.transpose(1, 0, 2, 3, 4)                # (b,nc,h,p,n)
+
+    # ---- inter-chunk output contribution ----------------------------------
+    Ch = _rep(Cc, rep, 3)                               # (b,nc,L,h,n)
+    state_decay_out = jnp.exp(a).transpose(0, 1, 3, 2)  # (b,nc,L,h)
+    y_inter = jnp.einsum("bclhn,bchpn,bclh->bclhp", Ch, prev, state_decay_out)
+
+    y = (y_intra + y_inter).reshape(b, sp, h, p)[:, :s]
+    return y.astype(x.dtype), final
+
+
+def ssd_step(state, x_t, dt_t, A, B_t, C_t):
+    """Single decode step.  state: (B,H,P,N); x_t: (B,H,P); dt_t: (B,H);
+    B_t/C_t: (B,G,N).  Returns (y_t (B,H,P), new_state)."""
+    h = x_t.shape[1]
+    g = B_t.shape[1]
+    rep = h // g
+    sf = state.astype(jnp.float32)
+    da = jnp.exp(dt_t.astype(jnp.float32) * A.astype(jnp.float32))
+    Bh = _rep(B_t.astype(jnp.float32), rep, 1)
+    Ch = _rep(C_t.astype(jnp.float32), rep, 1)
+    sf = sf * da[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt_t.astype(jnp.float32), Bh, x_t.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, sf)
+    return y.astype(x_t.dtype), sf

@@ -1,0 +1,4 @@
+from repro.optim.optimizer import (  # noqa: F401
+    OptimizerConfig, init_opt_state, apply_updates, schedule_lr,
+    opt_state_specs, global_norm, clip_by_global_norm,
+)

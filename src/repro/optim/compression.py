@@ -1,0 +1,82 @@
+"""Gradient compression with error feedback (the AVEC slow-link rule applied
+to training: traffic crossing the DCN `pod` axis is int8).
+
+``ErrorFeedback`` keeps the quantization residual and folds it into the next
+step's gradients (Seide et al. 1-bit SGD / EF-SGD), which keeps convergence
+unbiased.  ``compressed_psum`` is the in-graph form used inside shard_map
+around the cross-pod reduction: quantize -> (wire: int8) -> dequantize ->
+psum.  On this simulator the bandwidth saving is accounted analytically
+(collective bytes x 1/4 in the roofline), while the *numerics* are exactly
+those of an int8 ring all-reduce."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _q_leaf(x):
+    flat = x.reshape(-1, x.shape[-1]) if x.ndim >= 2 else x.reshape(1, -1)
+    q, s = ops.quantize_int8(flat.astype(jnp.float32), impl="ref")
+    return q, s
+
+
+def _dq_leaf(q, s, shape, dtype):
+    out = ops.dequantize_int8(q, s, jnp.float32, impl="ref")
+    return out.reshape(shape).astype(dtype)
+
+
+def compress_tree(tree):
+    """tree -> (quantized tree of {"q","s"}, wire_bytes int)."""
+    wire = 0
+    out = {}
+    flat, tdef = jax.tree_util.tree_flatten(tree)
+    qs = []
+    for leaf in flat:
+        q, s = _q_leaf(leaf)
+        wire += q.size * 1 + s.size * 4
+        qs.append({"q": q, "s": s, "shape": tuple(leaf.shape),
+                   "dtype": str(leaf.dtype)})
+    return jax.tree_util.tree_unflatten(tdef, qs), wire
+
+
+def decompress_tree(ctree):
+    def dq(entry):
+        return _dq_leaf(entry["q"], entry["s"], entry["shape"],
+                        jnp.dtype(entry["dtype"]))
+    return jax.tree_util.tree_map(dq, ctree,
+                                  is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+
+
+class ErrorFeedback:
+    """Stateful EF compressor for a gradient pytree."""
+
+    @staticmethod
+    def init(grads):
+        return jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    @staticmethod
+    def compress(grads, residual):
+        """Returns (quantized-dequantized grads, new residual)."""
+        def one(g, e):
+            corrected = g.astype(jnp.float32) + e
+            q, s = _q_leaf(corrected)
+            deq = _dq_leaf(q, s, corrected.shape, jnp.float32)
+            return deq.astype(g.dtype), corrected - deq
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_e = tdef.flatten_up_to(residual)
+        out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        return (tdef.unflatten([o[0] for o in out]),
+                tdef.unflatten([o[1] for o in out]))
+
+
+def compressed_psum(tree, axis_name: str):
+    """int8-on-the-wire psum (numerics of quantize -> all-reduce ->
+    dequantize); call inside shard_map over ``axis_name``."""
+    def one(x):
+        q, s = _q_leaf(x)
+        deq = _dq_leaf(q, s, x.shape, jnp.float32)
+        return jax.lax.psum(deq, axis_name).astype(x.dtype)
+    return jax.tree_util.tree_map(one, tree)

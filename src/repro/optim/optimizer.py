@@ -1,0 +1,219 @@
+"""Optimizers (pure JAX, no external deps): AdamW and Adafactor, with
+warmup-cosine / WSD (warmup-stable-decay, MiniCPM) / constant schedules and
+global-norm gradient clipping.
+
+Adafactor (factored second moment) is selected by the ≥90B assigned archs so
+optimizer state fits v5e HBM (see DESIGN.md §5 memory fitting)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"       # cosine | wsd | const
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    final_lr_frac: float = 0.1
+    wsd_stable_frac: float = 0.9   # fraction of post-warmup steps held stable
+    # adafactor
+    factored_min_dim: int = 32
+    clip_threshold: float = 1.0
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def schedule_lr(ocfg: OptimizerConfig, step) -> jnp.ndarray:
+    s = jnp.asarray(step, jnp.float32)
+    w = jnp.asarray(max(ocfg.warmup_steps, 1), jnp.float32)
+    total = jnp.asarray(max(ocfg.total_steps, 2), jnp.float32)
+    warm = jnp.minimum(s / w, 1.0)
+    if ocfg.schedule == "const":
+        post = 1.0
+    elif ocfg.schedule == "cosine":
+        t = jnp.clip((s - w) / jnp.maximum(total - w, 1.0), 0.0, 1.0)
+        post = ocfg.final_lr_frac + (1 - ocfg.final_lr_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+    elif ocfg.schedule == "wsd":
+        # warmup -> stable plateau -> linear decay to final_lr_frac (MiniCPM)
+        decay_start = w + ocfg.wsd_stable_frac * (total - w)
+        t = jnp.clip((s - decay_start) / jnp.maximum(total - decay_start, 1.0),
+                     0.0, 1.0)
+        post = 1.0 - (1.0 - ocfg.final_lr_frac) * t
+    else:
+        raise ValueError(ocfg.schedule)
+    return ocfg.lr * warm * post
+
+
+# ---------------------------------------------------------------------------
+# Common helpers
+# ---------------------------------------------------------------------------
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def _adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params)}
+
+
+def _adamw_update(ocfg, grads, state, params, step):
+    lr = schedule_lr(ocfg, step)
+    t = jnp.asarray(step, jnp.float32) + 1.0
+    b1, b2 = ocfg.beta1, ocfg.beta2
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * gf
+        v = b2 * v + (1 - b2) * jnp.square(gf)
+        mhat = m / (1 - b1 ** t)
+        vhat = v / (1 - b2 ** t)
+        delta = mhat / (jnp.sqrt(vhat) + ocfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + ocfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m, v
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v}, lr
+
+
+# ---------------------------------------------------------------------------
+# Adafactor
+# ---------------------------------------------------------------------------
+
+def _factored(p, min_dim: int) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= min_dim and p.shape[-2] >= min_dim
+
+
+def _adafactor_init(params, ocfg):
+    def init(p):
+        if _factored(p, ocfg.factored_min_dim):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"slots": jax.tree_util.tree_map(init, params,
+                                            is_leaf=lambda x: hasattr(x, "shape"))}
+
+
+def _adafactor_update(ocfg, grads, state, params, step):
+    lr = schedule_lr(ocfg, step)
+    t = jnp.asarray(step, jnp.float32) + 1.0
+    decay = 1.0 - t ** -0.8
+
+    def upd(g, slot, p):
+        gf = g.astype(jnp.float32)
+        g2 = jnp.square(gf) + 1e-30
+        if "vr" in slot:
+            vr = decay * slot["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc = decay * slot["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            precond = (vr / denom)[..., None] * vc[..., None, :]
+            update = gf * jax.lax.rsqrt(precond + 1e-30)
+            new_slot = {"vr": vr, "vc": vc}
+        else:
+            v = decay * slot["v"] + (1 - decay) * g2
+            update = gf * jax.lax.rsqrt(v + 1e-30)
+            new_slot = {"v": v}
+        # RMS update clipping (Adafactor §B)
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + 1e-30)
+        update = update / jnp.maximum(1.0, rms / ocfg.clip_threshold)
+        if p.ndim >= 2:
+            update = update + ocfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+        return new_p, new_slot
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_s = tdef.flatten_up_to(state["slots"])
+    out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_s = tdef.unflatten([o[1] for o in out])
+    return new_p, {"slots": new_s}, lr
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+def init_opt_state(ocfg: OptimizerConfig, params) -> Any:
+    if ocfg.name == "adamw":
+        return _adamw_init(params)
+    if ocfg.name == "adafactor":
+        return _adafactor_init(params, ocfg)
+    raise ValueError(ocfg.name)
+
+
+def apply_updates(ocfg: OptimizerConfig, grads, opt_state, params, step):
+    """Returns (new_params, new_opt_state, metrics)."""
+    if ocfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, ocfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    if ocfg.name == "adamw":
+        new_p, new_s, lr = _adamw_update(ocfg, grads, opt_state, params, step)
+    else:
+        new_p, new_s, lr = _adafactor_update(ocfg, grads, opt_state, params, step)
+    return new_p, new_s, {"grad_norm": gnorm, "lr": lr}
+
+
+def opt_state_specs(ocfg: OptimizerConfig, param_spec_tree):
+    """ParamSpec tree for the optimizer state, mirroring init_opt_state's
+    structure (drives dry-run sharding derivation)."""
+    from repro.models.params import ParamSpec, is_spec
+
+    def f32(s: "ParamSpec") -> "ParamSpec":
+        return ParamSpec(tuple(s.shape), tuple(s.axes), "zeros", dtype=jnp.float32)
+
+    if ocfg.name == "adamw":
+        m = jax.tree_util.tree_map(f32, param_spec_tree, is_leaf=is_spec)
+        v = jax.tree_util.tree_map(f32, param_spec_tree, is_leaf=is_spec)
+        return {"m": m, "v": v}
+
+    def adafactor(s: "ParamSpec"):
+        shape = tuple(s.shape)
+        if len(shape) >= 2 and shape[-1] >= ocfg.factored_min_dim \
+                and shape[-2] >= ocfg.factored_min_dim:
+            return {"vr": ParamSpec(shape[:-1], tuple(s.axes)[:-1], "zeros",
+                                    dtype=jnp.float32),
+                    "vc": ParamSpec(shape[:-2] + shape[-1:],
+                                    tuple(s.axes)[:-2] + tuple(s.axes)[-1:],
+                                    "zeros", dtype=jnp.float32)}
+        return {"v": ParamSpec(shape, tuple(s.axes), "zeros", dtype=jnp.float32)}
+
+    return {"slots": jax.tree_util.tree_map(adafactor, param_spec_tree,
+                                            is_leaf=is_spec)}

@@ -1,0 +1,179 @@
+"""Continuous-batching serving engine.
+
+Decode-centric design (the AVEC destination's serving loop):
+* a fixed pool of B cache *slots* with per-slot positions (the decode step
+  scatters each row's new KV at its own index);
+* arriving requests are prefilled individually at their exact prompt length
+  (no pad pollution of SSM state) and spliced into a free slot of the batched
+  cache along axis 1;
+* every engine tick decodes ALL active slots in one batched step (greedy over
+  the real vocab — pad logits are -inf by construction);
+* finished slots (max_new_tokens or eos) free immediately and the next queued
+  request is admitted — continuous batching, not static batching.
+
+The engine is transport-agnostic: run it locally, or behind a
+DestinationExecutor so AVEC hosts stream requests to it.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models import transformer as tf
+from repro.models import encdec as ed
+
+
+@dataclass
+class Request:
+    rid: str
+    prompt: list
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    generated: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg, params, *, max_batch: int = 4, max_len: int = 256,
+                 context_fn=None) -> None:
+        assert cfg.family != "encdec", "engine currently targets decoder LMs"
+        self.cfg = cfg
+        self.params = params
+        self.B = max_batch
+        self.max_len = max_len
+        self.context_fn = context_fn  # optional: rid -> vision context row
+        self.queue: collections.deque[Request] = collections.deque()
+        self.slots: list[Optional[Request]] = [None] * max_batch
+        self.pos = np.zeros(max_batch, np.int32)
+        self.last_token = np.zeros(max_batch, np.int32)
+        self.cache = M.init_cache(cfg, max_batch, max_len, jnp.float32)
+        self.steps = 0
+
+        def _decode(params, cache, tokens, pos, context):
+            batch = {"tokens": tokens, "pos": pos}
+            if context is not None:
+                batch["vision"] = context
+            return M.decode_step(cfg, params, cache, batch)
+
+        self._decode = jax.jit(_decode)
+        self._prefill_cache = {}
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _prefill_fn(self, plen: int):
+        if plen not in self._prefill_cache:
+            cfg = self.cfg
+
+            def _prefill(params, tokens, context):
+                batch = {"tokens": tokens}
+                if context is not None:
+                    batch["vision"] = context
+                logits, cache = M.prefill(cfg, params, batch, self.max_len,
+                                          cache_dtype=jnp.float32)
+                return logits, cache
+
+            self._prefill_cache[plen] = jax.jit(_prefill)
+        return self._prefill_cache[plen]
+
+    def _admit(self) -> None:
+        for slot in range(self.B):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            tokens = jnp.asarray(np.array(req.prompt, np.int32)[None])
+            ctx = self.context_fn(req.rid) if self.context_fn else None
+            logits, cache1 = self._prefill_fn(len(req.prompt))(
+                self.params, tokens, ctx)
+            # splice the single-row cache into the batched cache at `slot`
+            self.cache = jax.tree_util.tree_map(
+                lambda big, one: jax.lax.dynamic_update_slice_in_dim(
+                    big, one.astype(big.dtype), slot, axis=1),
+                self.cache, cache1)
+            nxt = int(jnp.argmax(logits[0, -1, :self.cfg.vocab_size]))
+            self.slots[slot] = req
+            self.pos[slot] = len(req.prompt)
+            self.last_token[slot] = nxt
+            req.generated.append(nxt)
+            self._maybe_finish(slot)
+
+    def _maybe_finish(self, slot: int) -> None:
+        req = self.slots[slot]
+        if req is None:
+            return
+        if (len(req.generated) >= req.max_new_tokens
+                or (req.eos_id is not None and req.generated[-1] == req.eos_id)):
+            req.done = True
+            self.slots[slot] = None
+
+    # ------------------------------------------------------------------
+    def tick(self) -> int:
+        """Admit + one batched decode step.  Returns #active slots."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return 0
+        tokens = jnp.asarray(self.last_token[:, None])
+        pos = jnp.asarray(self.pos)
+        ctx = None
+        if self.context_fn:
+            ctx = jnp.stack([
+                self.context_fn(self.slots[i].rid) if self.slots[i] else
+                jnp.zeros((self.cfg.num_vision_tokens, self.cfg.d_model))
+                for i in range(self.B)])
+        logits, self.cache = self._decode(self.params, self.cache, tokens,
+                                          pos, ctx)
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :self.cfg.vocab_size], axis=-1))
+        for i in active:
+            self.pos[i] += 1
+            self.last_token[i] = nxt[i]
+            self.slots[i].generated.append(int(nxt[i]))
+            self._maybe_finish(i)
+        self.steps += 1
+        return len(active)
+
+    def run(self, max_ticks: int = 10_000) -> dict:
+        """Drain queue + slots; returns {rid: generated tokens}."""
+        done: dict[str, list] = {}
+        reqs = list(self.queue)
+        for _ in range(max_ticks):
+            self._admit()
+            if all(r is None for r in self.slots) and not self.queue:
+                break
+            self.tick()
+        for r in reqs:
+            done[r.rid] = r.generated
+        return done
+
+
+# ---------------------------------------------------------------------------
+# Reference: sequential (unbatched) greedy generation, for equivalence tests
+# ---------------------------------------------------------------------------
+
+def generate_sequential(cfg, params, prompt: list, max_new_tokens: int,
+                        max_len: int = 256, context=None) -> list:
+    tokens = jnp.asarray(np.array(prompt, np.int32)[None])
+    batch = {"tokens": tokens}
+    if context is not None:
+        batch["vision"] = context[None]
+    logits, cache = M.prefill(cfg, params, batch, max_len,
+                              cache_dtype=jnp.float32)
+    out = [int(jnp.argmax(logits[0, -1, :cfg.vocab_size]))]
+    pos = len(prompt)
+    for _ in range(max_new_tokens - 1):
+        db = {"tokens": jnp.asarray([[out[-1]]], jnp.int32),
+              "pos": jnp.asarray(pos, jnp.int32)}
+        if context is not None:
+            db["vision"] = context[None]
+        logits, cache = M.decode_step(cfg, params, cache, db)
+        out.append(int(jnp.argmax(logits[0, 0, :cfg.vocab_size])))
+        pos += 1
+    return out

@@ -1,0 +1,58 @@
+"""Train/eval step builders: value_and_grad + microbatch accumulation +
+optimizer application, as a single jit-able function."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.optim.optimizer import OptimizerConfig, apply_updates
+
+
+def make_train_step(cfg, ocfg: OptimizerConfig, accum: int = 1):
+    """Returns step(params, opt_state, batch, step_idx) ->
+    (params, opt_state, metrics).  ``accum`` > 1 splits the global batch into
+    microbatches with an in-graph lax.scan (gradient accumulation)."""
+
+    def loss_of(params, batch):
+        loss, metrics = M.loss_fn(cfg, params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def step(params, opt_state, batch, step_idx):
+        if accum <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+            mb = jax.tree_util.tree_map(split, batch)
+
+            def body(carry, b):
+                gsum, lsum = carry
+                (l, _), g = grad_fn(params, b)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, x: a + x.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(body, (g0, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree_util.tree_map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+            metrics = {"loss": loss, "xent": loss, "aux": jnp.zeros(())}
+        new_params, new_opt, om = apply_updates(ocfg, grads, opt_state, params,
+                                                step_idx)
+        return new_params, new_opt, {**metrics, **om}
+
+    return step
+
+
+def make_eval_step(cfg):
+    def eval_step(params, batch):
+        loss, metrics = M.loss_fn(cfg, params, batch)
+        return metrics
+    return eval_step

@@ -1,0 +1,80 @@
+"""Per-assigned-architecture smoke tests (reduced configs, CPU).
+
+One forward + one train step per arch; asserts output shapes and finiteness.
+The FULL configs are exercised only via the dry-run (no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_arch, reduced
+from repro.models import model as M
+from repro.optim.optimizer import OptimizerConfig, init_opt_state
+from repro.train.steps import make_train_step
+
+
+def _batch(cfg, B=2, S=16, key=0):
+    tok = jax.random.randint(jax.random.PRNGKey(key), (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tok, "targets": tok}
+    if cfg.family == "vlm":
+        batch["vision"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(key + 1), (B, cfg.num_vision_tokens, cfg.d_model))
+    if cfg.family == "encdec":
+        batch["frames"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(key + 2), (B, cfg.num_audio_frames, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_forward_and_shapes(arch):
+    cfg = reduced(get_arch(arch))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    h, aux = M.forward_hidden(cfg, params, batch)
+    assert h.shape == (2, 16, cfg.d_model)
+    lg = M.logits_from_hidden(cfg, params, h)
+    assert lg.shape == (2, 16, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(h)))
+    # pad logits masked
+    assert float(jnp.max(lg[..., cfg.vocab_size:])) < -1e20
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_train_step(arch):
+    cfg = reduced(get_arch(arch))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    ocfg = OptimizerConfig(name=cfg.optimizer, lr=1e-3, warmup_steps=1,
+                           total_steps=10)
+    opt = init_opt_state(ocfg, params)
+    step = jax.jit(make_train_step(cfg, ocfg))
+    batch = _batch(cfg)
+    # start at step 1: step 0 is inside LR warmup (lr=0 -> no-op update)
+    p1, o1, m1 = step(params, opt, batch, jnp.asarray(1))
+    assert np.isfinite(float(m1["loss"]))
+    p2, o2, m2 = step(p1, o1, batch, jnp.asarray(2))
+    # a second step on the same batch must reduce loss
+    assert float(m2["loss"]) < float(m1["loss"])
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_full_config_consistency(arch):
+    """Full (unreduced) config invariants — no allocation."""
+    cfg = get_arch(arch)
+    assert cfg.d_model % cfg.num_heads == 0 or cfg.head_dim > 0
+    assert cfg.num_heads % cfg.num_kv_heads == 0
+    assert cfg.padded_vocab % 2048 == 0 and cfg.padded_vocab >= cfg.vocab_size
+    n = cfg.param_count()
+    assert n > 0
+    # abstract params build without allocation and match init structure
+    abs_p = M.abstract_params(cfg)
+    assert len(jax.tree_util.tree_leaves(abs_p)) > 0
+
+
+def test_reduced_init_matches_abstract_shapes():
+    for arch in ARCH_IDS:
+        cfg = reduced(get_arch(arch))
+        concrete = M.init_params(cfg, jax.random.PRNGKey(0))
+        abstract = M.abstract_params(cfg)
+        ct = jax.tree_util.tree_map(lambda x: (x.shape, str(x.dtype)), concrete)
+        at = jax.tree_util.tree_map(lambda x: (x.shape, str(x.dtype)), abstract)
+        assert ct == at, arch

@@ -1,0 +1,161 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.serialization import (eq1_bytes, pack_message, tree_wire_bytes,
+                                      unpack_message)
+from repro.core.costmodel import Workload, offload_cycle_time, speedup
+from repro.core.virtualization import AcceleratorSpec
+from repro.kernels import ref
+from repro.models.moe import _capacity
+from repro.utils import round_up, stable_hash
+
+F32 = st.floats(min_value=-1e6, max_value=1e6, allow_nan=False,
+                width=32)
+
+
+# ---------------------------------------------------------------------------
+# serialization round-trips any array tree
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    shape=st.tuples(st.integers(1, 8), st.integers(1, 16)),
+    dtype=st.sampled_from([np.float32, np.int32, np.float64, np.int8]),
+    seed=st.integers(0, 2 ** 16),
+    meta_val=st.text(max_size=16),
+)
+def test_pack_unpack_roundtrip(shape, dtype, seed, meta_val):
+    rng = np.random.default_rng(seed)
+    if np.issubdtype(dtype, np.floating):
+        arr = rng.standard_normal(shape).astype(dtype)
+    else:
+        arr = rng.integers(-100, 100, size=shape).astype(dtype)
+    tree = {"x": arr, "nested": [arr, {"y": arr}]}
+    meta, out = unpack_message(pack_message({"m": meta_val}, tree))
+    assert meta["m"] == meta_val
+    np.testing.assert_array_equal(out["x"], arr)
+    np.testing.assert_array_equal(out["nested"][1]["y"], arr)
+
+
+@settings(max_examples=30, deadline=None)
+@given(rows=st.integers(1, 32), cols=st.integers(1, 64),
+       seed=st.integers(0, 999))
+def test_int8_quant_error_bound(rows, cols, seed):
+    """|dequant(quant(x)) - x| <= rowwise absmax/127, always."""
+    x = np.random.default_rng(seed).standard_normal((rows, cols)) \
+        .astype(np.float32) * 10
+    q, s = ref.quantize_int8(jnp.asarray(x))
+    out = np.asarray(ref.dequantize_int8(q, s))
+    bound = np.abs(x).max(axis=-1, keepdims=True) / 127.0
+    assert np.all(np.abs(out - x) <= bound + 1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(dims=st.integers(1, 10 ** 7),
+       c=st.floats(min_value=1.01, max_value=100.0, allow_nan=False))
+def test_eq1_monotone_in_dims(dims, c):
+    assert eq1_bytes(dims, c) > eq1_bytes(max(dims - 1, 0), c)
+    assert eq1_bytes(dims, c) >= dims * 4     # args alone are Dims*4
+
+
+# ---------------------------------------------------------------------------
+# cost model invariants
+# ---------------------------------------------------------------------------
+
+def _acc(flops, bw, lat=1e-3, ser=1e9):
+    return AcceleratorSpec(name="a", tier="t", peak_flops=flops,
+                           efficiency=0.5, mem_bytes=1e12,
+                           link_bandwidth=bw, link_latency=lat,
+                           serialize_rate=ser)
+
+
+@settings(max_examples=40, deadline=None)
+@given(flops=st.floats(1e9, 1e15), bw=st.floats(1e6, 1e11),
+       wf=st.floats(1e8, 1e13), nbytes=st.floats(1e3, 1e9))
+def test_offload_time_monotone(flops, bw, wf, nbytes):
+    """Faster destination or fatter link never increases cycle time."""
+    w = Workload("w", flops=wf, bytes_out=nbytes, bytes_back=nbytes / 10)
+    base = offload_cycle_time(w, _acc(flops, bw))
+    assert offload_cycle_time(w, _acc(flops * 2, bw)) <= base + 1e-12
+    assert offload_cycle_time(w, _acc(flops, bw * 2)) <= base + 1e-12
+
+
+@settings(max_examples=40, deadline=None)
+@given(host_f=st.floats(1e10, 1e12), dst_f=st.floats(1e10, 1e15),
+       wf=st.floats(1e9, 1e13))
+def test_speedup_sign(host_f, dst_f, wf):
+    """Offload to an infinitely-linked faster destination always >= 1x; a
+    slower destination can never beat local compute."""
+    w = Workload("w", flops=wf, bytes_out=0.0, bytes_back=0.0)
+    host, dst = _acc(host_f, 1e12, lat=0, ser=0), _acc(dst_f, 1e12, lat=0, ser=0)
+    s = speedup(w, host, dst)
+    if dst_f >= host_f:
+        assert s >= 1.0 - 1e-9
+    else:
+        assert s <= 1.0 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(t=st.integers(8, 512), e=st.integers(2, 64), k=st.integers(1, 4),
+       cf=st.floats(1.0, 4.0))
+def test_moe_capacity_bounds(t, e, k, cf):
+    from dataclasses import dataclass
+
+    @dataclass
+    class FakeMoE:
+        top_k: int
+        num_experts: int
+        capacity_factor: float
+
+    @dataclass
+    class FakeCfg:
+        moe: FakeMoE
+
+    k = min(k, e)
+    cfg = FakeCfg(FakeMoE(k, e, cf))
+    C = _capacity(cfg, t)
+    assert C % 8 == 0 and C >= 8
+    assert C >= t * k / e                   # never below the balanced load
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 99))
+def test_moe_outputs_finite_and_combine_weights(seed):
+    from repro.configs import get_arch, reduced
+    from repro.models.moe import apply_moe
+    from repro.models import model as M
+
+    cfg = reduced(get_arch("moonshot-v1-16b-a3b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    moe_p = jax.tree_util.tree_map(
+        lambda x: x[0], params["blocks"])["layers"][0]["moe"]
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, 8, cfg.d_model))
+    y, aux = apply_moe(cfg, moe_p, x)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(aux) >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# misc utils
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(x=st.integers(0, 10 ** 9), m=st.integers(1, 10 ** 6))
+def test_round_up(x, m):
+    r = round_up(x, m)
+    assert r >= x and r % m == 0 and r - x < m
+
+
+@settings(max_examples=20, deadline=None)
+@given(obj=st.dictionaries(st.text(max_size=8),
+                           st.integers(-10 ** 9, 10 ** 9), max_size=8))
+def test_stable_hash_deterministic(obj):
+    assert stable_hash(obj) == stable_hash(dict(reversed(list(obj.items()))))

@@ -1,0 +1,203 @@
+"""Substrate behaviour: optimizer, schedules, data pipeline, checkpointing,
+trainer fault tolerance, gradient compression."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.data.pipeline import make_pipeline
+from repro.models import model as M
+from repro.optim.compression import ErrorFeedback, compress_tree, decompress_tree
+from repro.optim.optimizer import (OptimizerConfig, apply_updates,
+                                   init_opt_state, schedule_lr)
+from repro.train.trainer import InjectedFailure, Trainer
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def test_wsd_schedule_shape():
+    o = OptimizerConfig(lr=1.0, schedule="wsd", warmup_steps=10,
+                        total_steps=110, final_lr_frac=0.1, wsd_stable_frac=0.8)
+    lrs = [float(schedule_lr(o, s)) for s in range(111)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[10] - 1.0) < 1e-6          # end of warmup
+    assert abs(lrs[60] - 1.0) < 1e-6          # stable plateau (MiniCPM WSD)
+    assert lrs[110] == pytest.approx(0.1, rel=1e-3)   # decayed
+    assert lrs[95] > lrs[105]                 # decaying tail
+
+
+def test_cosine_schedule_monotone_tail():
+    o = OptimizerConfig(lr=1.0, schedule="cosine", warmup_steps=5,
+                        total_steps=50, final_lr_frac=0.1)
+    lrs = [float(schedule_lr(o, s)) for s in range(51)]
+    assert lrs[5] == pytest.approx(1.0)
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[5:], lrs[6:]))
+    assert lrs[50] == pytest.approx(0.1, rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor"])
+def test_optimizer_reduces_quadratic(name):
+    o = OptimizerConfig(name=name, lr=0.1, schedule="const", warmup_steps=1,
+                        weight_decay=0.0, grad_clip=0)
+    params = {"w": jnp.ones((64, 64)) * 3.0}
+    state = init_opt_state(o, params)
+    for step in range(50):
+        grads = {"w": 2 * params["w"]}        # d/dw ||w||^2
+        params, state, _ = apply_updates(o, grads, state, params, step)
+    assert float(jnp.mean(jnp.abs(params["w"]))) < 1.0
+
+
+def test_adafactor_memory_is_factored():
+    o = OptimizerConfig(name="adafactor")
+    params = {"w": jnp.zeros((256, 512)), "b": jnp.zeros((7,))}
+    st = init_opt_state(o, params)
+    assert st["slots"]["w"]["vr"].shape == (256,)
+    assert st["slots"]["w"]["vc"].shape == (512,)
+    assert st["slots"]["b"]["v"].shape == (7,)
+
+
+def test_grad_clip():
+    from repro.optim.optimizer import clip_by_global_norm
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) > 100
+    total = jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree_util.tree_leaves(clipped)))
+    assert float(total) == pytest.approx(1.0, rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_deterministic_and_resumable():
+    p1 = make_pipeline(1000, 32, 8, seed=3)
+    p2 = make_pipeline(1000, 32, 8, seed=3)
+    np.testing.assert_array_equal(p1.batch(7)["tokens"], p2.batch(7)["tokens"])
+    assert not np.array_equal(p1.batch(7)["tokens"], p1.batch(8)["tokens"])
+
+
+def test_pipeline_host_sharding_partition():
+    full = make_pipeline(1000, 16, 8, seed=1, host_id=0, num_hosts=1)
+    h0 = make_pipeline(1000, 16, 8, seed=1, host_id=0, num_hosts=2)
+    h1 = make_pipeline(1000, 16, 8, seed=1, host_id=1, num_hosts=2)
+    assert h0.batch(0)["tokens"].shape == (4, 16)
+    assert h1.batch(0)["tokens"].shape == (4, 16)
+    assert not np.array_equal(h0.batch(0)["tokens"], h1.batch(0)["tokens"])
+
+
+def test_pipeline_targets_are_shifted_tokens():
+    p = make_pipeline(1000, 16, 4, seed=0)
+    b = p.batch(0)
+    assert b["tokens"].shape == b["targets"].shape
+    # structure: targets are learnable (bigram-correlated), not iid uniform
+    assert b["tokens"].max() < 1000
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_bf16_and_retention():
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, keep=2)
+        state = {"w": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3),
+                 "n": jnp.asarray(3, jnp.int32)}
+        for s in (1, 2, 3):
+            ck.save(s, state, blocking=True)
+        assert ck.steps() == [2, 3]           # retention keeps newest 2
+        tmpl = {"w": jax.ShapeDtypeStruct((2, 3), jnp.bfloat16),
+                "n": jax.ShapeDtypeStruct((), jnp.int32)}
+        got, step = ck.restore(tmpl)
+        assert step == 3
+        assert got["w"].dtype == jnp.bfloat16
+        np.testing.assert_array_equal(np.asarray(got["w"], np.float32),
+                                      np.asarray(state["w"], np.float32))
+
+
+def test_trainer_crash_resume_bit_faithful():
+    cfg = reduced(get_arch("granite-3-2b"))
+    data = make_pipeline(cfg.vocab_size, 32, 8, seed=0)
+    ocfg = OptimizerConfig(lr=3e-3, warmup_steps=5, total_steps=40,
+                           schedule="wsd")
+    with tempfile.TemporaryDirectory() as d:
+        t = Trainer(cfg, ocfg, data, ckpt_dir=d, ckpt_every=10)
+        with pytest.raises(InjectedFailure):
+            t.run(30, fail_at=25)
+        rep = Trainer(cfg, ocfg, data, ckpt_dir=d, ckpt_every=10).run(30)
+        assert rep.resumed_from == 20
+    with tempfile.TemporaryDirectory() as d:
+        full = Trainer(cfg, ocfg, data, ckpt_dir=d, ckpt_every=10).run(30)
+    assert full.losses[-1] == pytest.approx(rep.losses[-1], abs=1e-6)
+
+
+def test_trainer_loss_decreases():
+    cfg = reduced(get_arch("granite-3-2b"))
+    data = make_pipeline(cfg.vocab_size, 32, 8, seed=0)
+    ocfg = OptimizerConfig(lr=3e-3, warmup_steps=5, total_steps=60,
+                           schedule="cosine")
+    rep = Trainer(cfg, ocfg, data).run(30)
+    assert rep.losses[-1] < rep.losses[0] - 0.5
+
+
+def test_grad_accumulation_matches_full_batch():
+    cfg = reduced(get_arch("granite-3-2b"))
+    data = make_pipeline(cfg.vocab_size, 16, 8, seed=0)
+    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=10,
+                           schedule="const")
+    from repro.train.steps import make_train_step
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(ocfg, params)
+    batch = jax.tree_util.tree_map(jnp.asarray, data.batch(0))
+    p1, _, m1 = jax.jit(make_train_step(cfg, ocfg, accum=1))(
+        params, opt, batch, jnp.asarray(0))
+    p2, _, m2 = jax.jit(make_train_step(cfg, ocfg, accum=4))(
+        params, init_opt_state(ocfg, params), batch, jnp.asarray(0))
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
+    d = max(float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(jax.tree_util.tree_leaves(p1),
+                            jax.tree_util.tree_leaves(p2)))
+    assert d < 5e-5
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_compress_tree_roundtrip_and_wire_shrink():
+    tree = {"a": jnp.asarray(np.random.default_rng(0).standard_normal(
+        (128, 64)), jnp.float32)}
+    ctree, wire = compress_tree(tree)
+    out = decompress_tree(ctree)
+    raw = 128 * 64 * 4
+    assert wire < raw / 3                     # ~4x shrink minus scales
+    err = float(jnp.max(jnp.abs(out["a"] - tree["a"])))
+    bound = float(jnp.max(jnp.abs(tree["a"]))) / 127
+    assert err <= bound + 1e-6
+
+
+def test_error_feedback_unbiased_accumulation():
+    """With EF, the sum of compressed grads converges to the sum of true
+    grads (residual stays bounded)."""
+    rng = np.random.default_rng(1)
+    g_true = jnp.asarray(rng.standard_normal((32, 32)) * 1e-3, jnp.float32)
+    grads = {"w": g_true}
+    resid = ErrorFeedback.init(grads)
+    total = jnp.zeros_like(g_true)
+    for _ in range(50):
+        comp, resid = ErrorFeedback.compress(grads, resid)
+        total = total + comp["w"]
+    want = 50 * g_true
+    # relative error of accumulated compressed stream vs true stream
+    rel = float(jnp.linalg.norm(total - want) / jnp.linalg.norm(want))
+    assert rel < 0.02
