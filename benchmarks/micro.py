@@ -38,6 +38,247 @@ def bench_serialization() -> list:
     return rows
 
 
+def _seed_pack_emulation(meta: dict, tree) -> bytes:
+    """The pre-vectored hot path, byte-for-byte: per-leaf ``tobytes()`` copy
+    + one ``b"".join`` copy.  Kept as the baseline the zero-copy pack is
+    measured against (BENCH_dataplane.json `serialize.seed_*`)."""
+    import struct
+
+    import msgpack
+
+    from repro.core.serialization import MAGIC, _flatten
+    leaves = []
+    tmpl = _flatten(tree, leaves)
+    bufs = [np.ascontiguousarray(a).tobytes() for a in leaves]
+    metas = [{"dtype": str(a.dtype), "shape": list(a.shape), "codec": "raw"}
+             for a in leaves]
+    header = msgpack.packb({"meta": meta, "template": tmpl, "leaves": metas,
+                            "buf_lens": [len(b) for b in bufs]},
+                           use_bin_type=True)
+    return b"".join([MAGIC, struct.pack("<I", len(header)), header, *bufs])
+
+
+def _serialize_timings(n: int = 50) -> dict:
+    """Pack/unpack timings on the 512x512 f32 payload, shared by the CSV
+    rows (bench_dataplane) and the JSON artifact (dataplane_report)."""
+    from repro.core.serialization import pack_message, unpack_message
+    x = {"x": np.random.default_rng(0).standard_normal((512, 512))
+         .astype(np.float32)}
+    blob = bytes(pack_message({}, x))
+    return {
+        "nbytes": x["x"].nbytes,
+        "t_vec": _time(lambda: pack_message({}, x), n=n),
+        "t_seed": _time(lambda: _seed_pack_emulation({}, x), n=n),
+        "t_view": _time(lambda: unpack_message(blob), n=n),
+        "t_copy": _time(lambda: unpack_message(blob, copy=True), n=n),
+    }
+
+
+def bench_dataplane() -> list:
+    """Zero-copy wire format micro numbers (the heavy pipelined-offload
+    comparison lives in ``dataplane_report``)."""
+    t = _serialize_timings()
+    nb = t["nbytes"]
+    return [
+        ("dataplane/pack_raw_vectored", t["t_vec"] * 1e6,
+         f"{nb / t['t_vec'] / 1e9:.1f}GB/s"),
+        ("dataplane/pack_raw_seed_joined", t["t_seed"] * 1e6,
+         f"{nb / t['t_seed'] / 1e9:.1f}GB/s "
+         f"{t['t_seed'] / t['t_vec']:.1f}x slower"),
+        ("dataplane/unpack_raw_view", t["t_view"] * 1e6,
+         f"{nb / t['t_view'] / 1e9:.1f}GB/s"),
+        ("dataplane/unpack_raw_copy", t["t_copy"] * 1e6,
+         f"{nb / t['t_copy'] / 1e9:.1f}GB/s"),
+    ]
+
+
+_OPENPOSE_DESTINATION = r"""
+import sys, os, threading
+sys.path.insert(0, sys.argv[1])
+# model the paper's topology: the destination is a separate machine with its
+# own compute — keep it off the host's core so overlap has CPU to run on
+n = os.cpu_count() or 2
+if n > 1:
+    try:
+        os.sched_setaffinity(0, set(range(1, n)))
+    except (AttributeError, OSError):
+        pass
+import repro.models.openpose as op
+from repro.core.executor import DestinationExecutor
+from repro.core.library import make_openpose_library
+from repro.core.transport import TCPServer
+net = op.OpenPoseLite()
+ex = DestinationExecutor({"openpose": make_openpose_library(net)},
+                         name="bench-dest")
+server = TCPServer(ex.handle).start()
+print(server.port, flush=True)
+threading.Event().wait()
+"""
+
+
+def spawn_openpose_destination():
+    """Start an OpenPose-lite destination executor in its OWN process (the
+    paper's topology: host and destination are different machines with
+    different interpreters).  Returns (subprocess, port)."""
+    import os
+    import subprocess
+    import sys
+
+    import repro
+    pkg_dir = (os.path.dirname(repro.__file__) if getattr(repro, "__file__", None)
+               else list(repro.__path__)[0])       # namespace package
+    src = os.path.dirname(os.path.abspath(pkg_dir))
+    proc = subprocess.Popen([sys.executable, "-c", _OPENPOSE_DESTINATION, src],
+                            stdout=subprocess.PIPE, text=True)
+    line = proc.stdout.readline()
+    if not line.strip():        # child died before binding: name the failure
+        rc = proc.poll()
+        proc.terminate()
+        raise RuntimeError(
+            f"openpose destination subprocess failed to start (exit {rc}); "
+            "run it by hand to see the traceback")
+    return proc, int(line)
+
+
+def _openpose_offload_walls(frames: int, in_flight: int) -> tuple[float, float]:
+    """(sync_wall_s, pipelined_wall_s) for N OpenPose-lite frames over
+    loopback TCP to a destination in its own process, model resident and jit
+    warm in both cases.  (Co-locating the destination in this process makes
+    "overlap" impossible — one GIL — and was measured to invert the
+    comparison.)"""
+    import repro.models.openpose as op
+    from repro.core.executor import HostRuntime, PipelinedHostRuntime
+    from repro.core.transport import TCPChannel
+    from repro.models.params import init_params
+
+    net = op.OpenPoseLite()
+    params = init_params(op.op_param_specs(net), jax.random.PRNGKey(0),
+                         jnp.float32)
+    proc, port = spawn_openpose_destination()
+    fp = "bench-openpose"
+    batch = [np.asarray(op.make_frames(1, 368, 656)) for _ in range(frames)]
+
+    try:
+        sync_rt = HostRuntime(TCPChannel.connect("127.0.0.1", port))
+        sync_rt.put_model(fp, "openpose", params)
+        sync_rt.run(fp, "forward", {"frames": batch[0]})      # jit warmup
+        pipe_rt = PipelinedHostRuntime(
+            TCPChannel.connect("127.0.0.1", port), max_in_flight=in_flight)
+        pipe_rt.run(fp, "forward", {"frames": batch[0]})      # warm channel
+
+        def sync_pass() -> float:
+            t0 = time.perf_counter()
+            for f in batch:
+                sync_rt.run(fp, "forward", {"frames": f})
+            return time.perf_counter() - t0
+
+        def pipe_pass() -> float:
+            t0 = time.perf_counter()
+            futs = [pipe_rt.run_async(fp, "forward", {"frames": f})
+                    for f in batch]
+            for f in futs:
+                f.result(timeout=300)
+            return time.perf_counter() - t0
+
+        # interleave passes and take the min per mode: destination compute
+        # jitter on a shared CPU otherwise swamps the overlap being measured
+        sync_walls, pipe_walls = [], []
+        for _ in range(3):
+            sync_walls.append(sync_pass())
+            pipe_walls.append(pipe_pass())
+        t_sync, t_pipe = min(sync_walls), min(pipe_walls)
+        sync_rt.close()
+        pipe_rt.close()
+    finally:
+        proc.terminate()
+    return t_sync, t_pipe
+
+
+def _coalesce_walls(clients: int = 8, reps: int = 4) -> tuple[float, float, dict]:
+    """(uncoalesced_wall_s, coalesced_wall_s, stats) for N concurrent clients
+    hitting one destination with batchable matmul requests."""
+    import threading
+
+    from repro.core.executor import DestinationExecutor, HostRuntime
+    from repro.core.transport import DirectChannel
+
+    w = np.random.default_rng(0).standard_normal((256, 256)).astype(np.float32)
+    mm = jax.jit(lambda p, x: x @ p["w"])
+
+    def matmul(params, state, args):
+        return {"y": np.asarray(mm(params, jnp.asarray(args["x"])))}
+
+    xs = [np.random.default_rng(i).standard_normal((4, 256)).astype(np.float32)
+          for i in range(clients)]
+
+    def drive(ex) -> float:
+        rts = [HostRuntime(DirectChannel(ex)) for _ in range(clients)]
+        rts[0].put_model("fp", "mm", {"w": w})
+        rts[0].run("fp", "matmul", {"x": xs[0]})          # jit warmup
+        barrier = threading.Barrier(clients)
+
+        def worker(i):
+            barrier.wait()
+            for _ in range(reps):
+                rts[i].run("fp", "matmul", {"x": xs[i]}, batchable=True)
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(clients)]
+        t0 = time.perf_counter()
+        [t.start() for t in threads]
+        [t.join() for t in threads]
+        return time.perf_counter() - t0
+
+    lib = {"mm": {"matmul": matmul}}
+    plain = DestinationExecutor(dict(lib))
+    t_plain = min(drive(plain) for _ in range(3))     # min-of-3: jit/thread
+    coal = DestinationExecutor(dict(lib), coalesce=True,    # warmup jitter
+                               coalesce_window_s=0.002, max_coalesce=clients)
+    walls = [drive(coal), drive(coal)]
+    before = dict(coal.coalesce_stats)                # stats of the last rep
+    walls.append(drive(coal))                         # only, not cumulative
+    after = coal.coalesce_stats
+    stats = {"batches": after["batches"] - before["batches"],
+             "requests": after["requests"] - before["requests"],
+             "max_batch": after["max_batch"]}
+    t_coal = min(walls)
+    coal.shutdown()
+    return t_plain, t_coal, stats
+
+
+def dataplane_report(frames: int = 8, in_flight: int = 4) -> dict:
+    """The BENCH_dataplane.json payload: serialize throughput vs the seed
+    path, pipelined-vs-sync offload walls, and coalesced dispatch walls."""
+    t = _serialize_timings(n=100)
+    nb = t["nbytes"]
+    t_sync, t_pipe = _openpose_offload_walls(frames, in_flight)
+    t_plain, t_coal, stats = _coalesce_walls()
+    return {
+        "serialize_raw_512x512": {
+            "payload_bytes": nb,
+            "vectored_gbps": nb / t["t_vec"] / 1e9,
+            "seed_joined_gbps": nb / t["t_seed"] / 1e9,
+            "speedup_vs_seed": t["t_seed"] / t["t_vec"],
+            "unpack_view_gbps": nb / t["t_view"] / 1e9,
+            "unpack_copy_gbps": nb / t["t_copy"] / 1e9,
+        },
+        "pipelined_offload_openpose": {
+            "frames": frames,
+            "max_in_flight": in_flight,
+            "sync_wall_s": t_sync,
+            "pipelined_wall_s": t_pipe,
+            "speedup": t_sync / t_pipe,
+        },
+        "coalesced_dispatch": {
+            "clients": 8, "reps": 4,
+            "uncoalesced_wall_s": t_plain,
+            "coalesced_wall_s": t_coal,
+            "speedup": t_plain / t_coal,
+            "stats": stats,
+        },
+    }
+
+
 def bench_transport() -> list:
     from repro.core.transport import TCPChannel, TCPServer
     server = TCPServer(lambda b: b).start()
@@ -141,5 +382,6 @@ def bench_avec_offload_real() -> list:
     ]
 
 
-ALL_MICRO = [bench_serialization, bench_transport, bench_kernels,
-             bench_moe_dispatch, bench_engine, bench_avec_offload_real]
+ALL_MICRO = [bench_serialization, bench_dataplane, bench_transport,
+             bench_kernels, bench_moe_dispatch, bench_engine,
+             bench_avec_offload_real]

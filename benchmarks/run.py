@@ -1,5 +1,10 @@
 """Benchmark harness: one section per paper table/figure + framework micro
-benches + the roofline summary.  Prints ``name,us_per_call,derived`` CSV.
+benches + the roofline summary.  Prints ``name,us_per_call,derived`` CSV and
+writes ``BENCH_dataplane.json`` (zero-copy serialize throughput vs the seed
+path, pipelined-vs-sync offload walls, coalesced dispatch walls).
+
+``--smoke`` runs only the fast data-plane subset (CI's smoke bench);
+``--no-json`` skips the JSON artifact.
 
 For the paper tables the CSV cells are (name, model_value, "paper=<v>
 err=<pct>") so the reproduction gap is visible inline; §Repro in
@@ -7,38 +12,85 @@ EXPERIMENTS.md is generated from the same rows.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import traceback
 
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DATAPLANE_JSON = os.path.join(_REPO_ROOT, "BENCH_dataplane.json")
+if _REPO_ROOT not in sys.path:      # allow `python benchmarks/run.py`
+    sys.path.insert(0, _REPO_ROOT)
+
+
+def write_dataplane_json(frames: int = 8) -> dict:
+    from benchmarks import micro
+    report = micro.dataplane_report(frames=frames)
+    with open(DATAPLANE_JSON, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
 
 def main() -> None:
+    smoke = "--smoke" in sys.argv
+    emit_json = "--no-json" not in sys.argv
     rows = []
 
-    # --- paper tables (calibrated cost model; see paper_tables.py) --------
-    from benchmarks import paper_tables
-    for name, fn in paper_tables.ALL_TABLES.items():
-        for label, paper, model, err in fn():
-            rows.append((label, model, f"paper={paper} err={err * 100:.1f}%"))
-
-    # --- framework micro benches (real measurements on this host) ---------
     from benchmarks import micro
-    for bench in micro.ALL_MICRO:
-        try:
-            rows.extend(bench())
-        except Exception as e:  # noqa: BLE001
-            rows.append((f"{bench.__name__}/ERROR", 0.0, str(e)[:60]))
 
-    # --- roofline summary from dry-run artifacts (if present) -------------
-    try:
-        from benchmarks import roofline_report
-        rl = roofline_report.rows()
-        if rl:
-            rows.extend(rl)
-        else:
-            rows.append(("roofline/none", 0.0,
-                         "run python -m repro.launch.dryrun --all first"))
-    except Exception as e:  # noqa: BLE001
-        rows.append(("roofline/ERROR", 0.0, str(e)[:60]))
+    if smoke:
+        for bench in (micro.bench_serialization, micro.bench_dataplane,
+                      micro.bench_transport):
+            try:
+                rows.extend(bench())
+            except Exception as e:  # noqa: BLE001
+                rows.append((f"{bench.__name__}/ERROR", 0.0, str(e)[:60]))
+    else:
+        # --- paper tables (calibrated cost model; see paper_tables.py) ----
+        from benchmarks import paper_tables
+        for name, fn in paper_tables.ALL_TABLES.items():
+            for label, paper, model, err in fn():
+                rows.append((label, model, f"paper={paper} err={err * 100:.1f}%"))
+
+        # --- framework micro benches (real measurements on this host) -----
+        for bench in micro.ALL_MICRO:
+            try:
+                rows.extend(bench())
+            except Exception as e:  # noqa: BLE001
+                rows.append((f"{bench.__name__}/ERROR", 0.0, str(e)[:60]))
+
+        # --- roofline summary from dry-run artifacts (if present) ---------
+        try:
+            from benchmarks import roofline_report
+            rl = roofline_report.rows()
+            if rl:
+                rows.extend(rl)
+            else:
+                rows.append(("roofline/none", 0.0,
+                             "run python -m repro.launch.dryrun --all first"))
+        except Exception as e:  # noqa: BLE001
+            rows.append(("roofline/ERROR", 0.0, str(e)[:60]))
+
+    # --- data-plane acceptance artifact -----------------------------------
+    if emit_json:
+        try:
+            # 8 frames even in smoke mode: shorter streams spend most of the
+            # run ramping the in-flight window and under-report the overlap
+            report = write_dataplane_json(frames=8)
+            ser = report["serialize_raw_512x512"]
+            pipe = report["pipelined_offload_openpose"]
+            rows.append(("dataplane/serialize_speedup_vs_seed",
+                         ser["speedup_vs_seed"],
+                         f"{ser['vectored_gbps']:.1f}GB/s vs "
+                         f"{ser['seed_joined_gbps']:.1f}GB/s"))
+            rows.append(("dataplane/pipelined_vs_sync_speedup",
+                         pipe["speedup"],
+                         f"{pipe['frames']} frames "
+                         f"{pipe['pipelined_wall_s']:.2f}s vs "
+                         f"{pipe['sync_wall_s']:.2f}s"))
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            rows.append(("dataplane/ERROR", 0.0, "see traceback"))
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

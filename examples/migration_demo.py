@@ -17,21 +17,12 @@ from repro.core import (AcceleratorRegistry, AvecSession, DestinationExecutor,
                         DeviceAwareScheduler, HeartbeatMonitor, HostRuntime,
                         MigrationManager, SessionShadow, Workload)
 from repro.core.library import make_model_library
-from repro.core.transport import Channel
+from repro.core.transport import DirectChannel
 from repro.core.virtualization import JETSON_TX2
 from repro.models import model as M
 from repro.serving.engine import generate_sequential
 
 
-class DirectChannel(Channel):
-    def __init__(self, ex):
-        self.ex = ex
-
-    def request(self, data, timeout=None):
-        return self.ex.handle(data)
-
-    def close(self):
-        pass
 
 
 def main() -> None:

@@ -5,7 +5,9 @@ from repro.core.virtualization import (  # noqa: F401
     PAPER_TESTBED, JETSON_NANO, JETSON_TX2, CLOUD_RTX, TPU_V5E,
 )
 from repro.core.cache import ModelCache, model_fingerprint  # noqa: F401
-from repro.core.executor import DestinationExecutor, HostRuntime  # noqa: F401
+from repro.core.executor import (  # noqa: F401
+    DestinationExecutor, HostRuntime, PipelinedHostRuntime, RemoteError,
+)
 from repro.core.interception import InterceptionLibrary, AvecSession  # noqa: F401
 from repro.core.profiler import AvecProfiler  # noqa: F401
 from repro.core.costmodel import Workload  # noqa: F401

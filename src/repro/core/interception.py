@@ -12,11 +12,13 @@ and the rerouting dispatcher used by the interceptor.
 from __future__ import annotations
 
 import time
+from concurrent.futures import Future
 from typing import Any, Callable, Optional
 
 from repro.core.cache import model_fingerprint
 from repro.core.executor import HostRuntime, RemoteError
 from repro.core.profiler import AvecProfiler
+from repro.core.serialization import tree_wire_bytes
 
 
 class InterceptionLibrary:
@@ -117,6 +119,34 @@ class AvecSession:
             bytes_received=self.runtime.bytes_received - recv0,
             fn=fn)
         return out
+
+    # ------------------------------------------------------------------
+    def call_async(self, fn: str, args: Any, batchable: bool = False) -> Future:
+        """Pipelined execution cycle: submit without waiting, so the next
+        frame serializes/transmits while this one computes at the destination
+        (requires a :class:`~repro.core.executor.PipelinedHostRuntime`).
+
+        The returned Future resolves to the output tree; the profiler cycle
+        is recorded at completion (bytes are payload-tree sizes, since
+        concurrent in-flight frames make runtime byte-counter deltas
+        unattributable per call)."""
+        if not self._ready:
+            self.ensure_model()
+        sent = tree_wire_bytes(args)
+        t0 = time.perf_counter()
+        inner = self.runtime.run_async(self.fp, fn, args, batchable=batchable)
+
+        def _record(meta: dict, out: Any) -> Any:
+            wall = time.perf_counter() - t0
+            compute = meta.get("compute_s", 0.0)
+            self.profiler.record_cycle(
+                gpu_s=compute, comm_s=max(wall - compute, 0.0),
+                bytes_sent=sent, bytes_received=tree_wire_bytes(out), fn=fn)
+            return out
+
+        # runtime.chain yields a pump-aware future: waiting on it drives the
+        # channel (the pipelined runtime has no reader thread)
+        return self.runtime.chain(inner, _record)
 
     # ------------------------------------------------------------------
     def make_dispatcher(self, offload_fns: dict[str, str]):

@@ -1,35 +1,131 @@
 """AVEC wire format: pytree <-> framed bytes, with data-transfer accounting.
 
-Frame layout (paper's Boost-ASIO forwarding, made explicit):
+Frame layout, v2 (the paper's Boost-ASIO forwarding, made explicit and
+vectored for the zero-copy data plane).  The magic is versioned (``AVC2``)
+so a peer still speaking the v1 8-byte-preamble format fails the magic
+check loudly instead of misparsing the request id as a header length:
 
-    [4B magic 'AVEC'][4B u32 header_len][msgpack header][raw buffers...]
+    offset  0:  4B   magic  b"AVC2"
+    offset  4:  8B   u64 little-endian request id (0 = unpipelined)
+    offset 12:  4B   u32 little-endian header length
+    offset 16:       msgpack header
+    offset 16+hlen:  leaf buffers, in flattened (insertion) order
 
-The header carries the treedef (as a nested template), per-leaf dtype/shape,
-the codec, and arbitrary metadata.  Buffers are the raw (or compressed) leaf
-bytes in flattened order.
+The msgpack header carries the treedef (as a nested template), per-leaf
+dtype/shape, the codec, per-buffer lengths, and arbitrary metadata.
+
+**Vectored frames.** ``pack_message`` does NOT join the frame into one
+``bytes``: it returns a :class:`Frame` — a list of buffer segments
+``[preamble+header, leaf0, leaf1, ...]`` where ``raw``-codec leaves are
+``memoryview``s directly over the source arrays (no ``tobytes()`` copy).
+``TCPChannel`` writes a Frame with ``socket.sendmsg`` scatter-gather, so the
+only copy on the send path is the kernel's.  ``bytes(frame)`` joins (the
+legacy single-buffer form) when a contiguous blob is genuinely needed.
+
+**Request ids.** The fixed preamble carries a u64 request id so a pipelined
+host can keep many RPCs in flight on one channel and match responses
+out-of-order without parsing the msgpack header
+(:func:`frame_request_id` peeks it in O(1)).
+
+**Zero-copy unpack.** ``unpack_message`` returns, for ``raw``-codec leaves,
+``np.frombuffer`` views over the received frame (read-only) instead of
+per-leaf copies; pass ``copy=True`` where the caller mutates results.
+Unpacking a :class:`Frame` directly (loopback / in-process channels) reads
+each leaf from its own segment — fully zero-copy end to end.
 
 ``DataTransfer`` generalizes the paper's Eq. 1: DT = fixed header + sum of
 argument bytes + result bytes.  ``eq1_bytes`` reproduces the exact paper
 formula for an OpenPose frame (~3.75 MB at 1x3x368x656).
 
 Codecs (beyond-paper, the slow-link levers):
-  raw   — paper-faithful float32 forwarding
-  zstd  — lossless entropy compression
+  raw   — paper-faithful float32 forwarding (zero-copy on both ends)
+  zstd  — lossless entropy compression (zstandard if available, else zlib;
+          each leaf records the algorithm in its ``alg`` meta so nodes on
+          different images interoperate)
   int8  — per-row symmetric quantization (repro.kernels.comm_quant) + zstd
 """
 from __future__ import annotations
 
 import struct
 from dataclasses import dataclass, field
-from typing import Any
+from typing import Any, Iterator
 
 import msgpack
 import numpy as np
-import zstandard
 
-MAGIC = b"AVEC"
-_ZSTD_C = zstandard.ZstdCompressor(level=1)
-_ZSTD_D = zstandard.ZstdDecompressor()
+import zlib
+
+try:  # container images may lack zstandard; gate it (no new deps)
+    import zstandard
+
+    _ZSTD_C = zstandard.ZstdCompressor(level=1)
+    _ZSTD_D = zstandard.ZstdDecompressor()
+    _COMPRESS_ALG = "zstd"
+
+    def _compress(data) -> bytes:
+        return _ZSTD_C.compress(data)       # accepts buffers: no copy
+except ImportError:  # pragma: no cover - depends on image
+    zstandard = None
+    _COMPRESS_ALG = "zlib"
+
+    def _compress(data) -> bytes:
+        return zlib.compress(data, 1)       # accepts buffers: no copy
+
+
+def _decompress(data, alg: str) -> bytes:
+    """Decode by the algorithm recorded in the leaf meta — host and
+    destination may run different images, so the frame itself must say which
+    compressor produced it."""
+    if alg == "zlib":
+        return zlib.decompress(data)
+    if zstandard is None:
+        raise RuntimeError(
+            "frame compressed with zstd but zstandard is not installed on "
+            "this node; install it or use codec='raw'")
+    return _ZSTD_D.decompress(bytes(data))   # zstd one-shot needs len()able
+
+MAGIC = b"AVC2"                     # versioned: v1 frames were b"AVEC"
+PREAMBLE = 16                       # magic(4) + request_id(8) + header_len(4)
+_PREAMBLE_FMT = "<4sQI"
+
+
+# ---------------------------------------------------------------------------
+# Vectored frame
+# ---------------------------------------------------------------------------
+
+class Frame:
+    """A wire frame as a list of buffer segments (scatter-gather ready).
+
+    ``segments[0]`` is the preamble + msgpack header; each subsequent
+    segment is one encoded leaf buffer.  ``len(frame)`` is the total byte
+    length; ``bytes(frame)`` joins into the contiguous legacy form.
+    Segments referencing live numpy arrays keep them alive, so a Frame can
+    be held or sent later without copying.
+    """
+
+    __slots__ = ("segments", "nbytes")
+
+    def __init__(self, segments: list) -> None:
+        self.segments = segments
+        self.nbytes = sum(len(s) for s in segments)
+
+    def __len__(self) -> int:
+        return self.nbytes
+
+    def __iter__(self) -> Iterator:
+        return iter(self.segments)
+
+    def __bytes__(self) -> bytes:
+        return b"".join(self.segments)      # join accepts buffers: one copy
+
+    def to_bytes(self) -> bytes:
+        return bytes(self)
+
+
+def _leaf_view(arr: np.ndarray) -> memoryview:
+    """Byte view over an array with no copy when already contiguous."""
+    arr = np.ascontiguousarray(arr)
+    return arr.reshape(-1).view(np.uint8).data
 
 
 # ---------------------------------------------------------------------------
@@ -37,9 +133,16 @@ _ZSTD_D = zstandard.ZstdDecompressor()
 # ---------------------------------------------------------------------------
 
 def _flatten(obj: Any, leaves: list) -> Any:
-    """Replace array leaves with placeholder indices; return the template."""
+    """Replace array leaves with placeholder indices; return the template.
+
+    Dict *insertion order* is preserved on the wire (msgpack maps keep key
+    order), so pytree roundtrips are order-faithful — callers relying on
+    ``dict`` iteration order get back exactly what they sent.  Model
+    fingerprints are unaffected: ``core.cache.model_fingerprint`` hashes
+    ``jax.tree_util`` paths, not this template.
+    """
     if isinstance(obj, dict):
-        return {k: _flatten(v, leaves) for k, v in sorted(obj.items())}
+        return {k: _flatten(v, leaves) for k, v in obj.items()}
     if isinstance(obj, (list, tuple)):
         t = [_flatten(v, leaves) for v in obj]
         return {"__tuple__": t} if isinstance(obj, tuple) else t
@@ -76,7 +179,8 @@ def _np_dtype(name: str):
 # Codecs
 # ---------------------------------------------------------------------------
 
-def _encode_leaf(arr: np.ndarray, codec: str) -> tuple[bytes, dict]:
+def _encode_leaf(arr: np.ndarray, codec: str):
+    """-> (buffer segment, leaf meta).  raw segments are zero-copy views."""
     meta = {"dtype": str(arr.dtype), "shape": list(arr.shape)}
     if codec == "int8" and arr.dtype in (np.float32, np.float64) and arr.ndim >= 1 \
             and arr.size >= 64:
@@ -84,27 +188,33 @@ def _encode_leaf(arr: np.ndarray, codec: str) -> tuple[bytes, dict]:
         flat = np.ascontiguousarray(arr.reshape(-1, arr.shape[-1]), np.float32)
         q, s = kref.quantize_int8(flat)
         q, s = np.asarray(q), np.asarray(s)
-        payload = _ZSTD_C.compress(q.tobytes() + s.tobytes())
+        payload = _compress(q.tobytes() + s.tobytes())
         meta["codec"] = "int8"
+        meta["alg"] = _COMPRESS_ALG
         meta["rows"] = int(flat.shape[0])
         return payload, meta
-    raw = np.ascontiguousarray(arr).tobytes()
+    raw = _leaf_view(arr)
     if codec in ("zstd", "int8"):
         meta["codec"] = "zstd"
-        return _ZSTD_C.compress(raw), meta
+        meta["alg"] = _COMPRESS_ALG
+        return _compress(raw), meta
     meta["codec"] = "raw"
     return raw, meta
 
 
-def _decode_leaf(buf: bytes, meta: dict) -> np.ndarray:
+def _decode_leaf(buf, meta: dict, copy: bool) -> np.ndarray:
     dtype = _np_dtype(meta["dtype"])
     shape = tuple(meta["shape"])
     codec = meta.get("codec", "raw")
     if codec == "raw":
-        return np.frombuffer(buf, dtype).reshape(shape).copy()
-    raw = _ZSTD_D.decompress(buf)
+        out = np.frombuffer(buf, dtype).reshape(shape)
+        return out.copy() if copy else out
+    raw = _decompress(buf, meta.get("alg", _COMPRESS_ALG))
     if codec == "zstd":
-        return np.frombuffer(raw, dtype).reshape(shape).copy()
+        out = np.frombuffer(raw, dtype).reshape(shape)
+        # the fresh decompress buffer is owning but immutable (bytes); the
+        # copy=True escape hatch must still yield a writable array
+        return out.copy() if copy else out
     # int8: [q int8 rows*cols][scales f32 rows]
     rows = meta["rows"]
     cols = int(np.prod(shape)) // rows
@@ -117,7 +227,14 @@ def _decode_leaf(buf: bytes, meta: dict) -> np.ndarray:
 # Messages
 # ---------------------------------------------------------------------------
 
-def pack_message(meta: dict, tree: Any = None, codec: str = "raw") -> bytes:
+def pack_message(meta: dict, tree: Any = None, codec: str = "raw",
+                 request_id: int = 0) -> Frame:
+    """Pack (meta, pytree) into a vectored :class:`Frame`.
+
+    ``raw``-codec leaf segments are memoryviews over the (contiguous) source
+    arrays — no serialization copy.  Use ``bytes(frame)`` for the joined
+    legacy form.
+    """
     leaves: list[np.ndarray] = []
     tmpl = _flatten(tree, leaves) if tree is not None else None
     bufs, metas = [], []
@@ -129,19 +246,45 @@ def pack_message(meta: dict, tree: Any = None, codec: str = "raw") -> bytes:
         "meta": meta, "template": tmpl,
         "leaves": metas, "buf_lens": [len(b) for b in bufs],
     }, use_bin_type=True)
-    out = [MAGIC, struct.pack("<I", len(header)), header, *bufs]
-    return b"".join(out)
+    head = struct.pack(_PREAMBLE_FMT, MAGIC, request_id, len(header)) + header
+    return Frame([head, *bufs])
 
 
-def unpack_message(data: bytes) -> tuple[dict, Any]:
-    assert data[:4] == MAGIC, "bad frame magic"
-    hlen = struct.unpack("<I", data[4:8])[0]
-    header = msgpack.unpackb(data[8:8 + hlen], raw=False)
-    off = 8 + hlen
-    leaves = []
-    for blen, meta in zip(header["buf_lens"], header["leaves"]):
-        leaves.append(_decode_leaf(data[off:off + blen], meta))
-        off += blen
+def frame_request_id(data) -> int:
+    """O(1) peek of the request id (no msgpack parse) — the pipelined
+    reader's response-matching key."""
+    head = data.segments[0] if isinstance(data, Frame) else data
+    return struct.unpack_from("<Q", head, 4)[0]
+
+
+def _parse_head(head) -> tuple[dict, int, int]:
+    magic, rid, hlen = struct.unpack_from(_PREAMBLE_FMT, head, 0)
+    assert magic == MAGIC, "bad frame magic"
+    header = msgpack.unpackb(bytes(head[PREAMBLE:PREAMBLE + hlen]), raw=False)
+    return header, rid, hlen
+
+
+def unpack_message(data, copy: bool = False) -> tuple[dict, Any]:
+    """Unpack a frame (``bytes``/``bytearray``/``memoryview`` or a vectored
+    :class:`Frame`) into (meta, pytree).
+
+    With ``copy=False`` (default), ``raw``-codec leaves are read-only
+    ``np.frombuffer`` views over the frame — the frame's buffer must outlive
+    them, which holds for the per-frame receive buffers our channels
+    allocate.  Pass ``copy=True`` where the caller mutates leaves in place.
+    """
+    if isinstance(data, Frame):
+        header, _, _ = _parse_head(data.segments[0])
+        leaves = [_decode_leaf(seg, meta, copy)
+                  for seg, meta in zip(data.segments[1:], header["leaves"])]
+    else:
+        mv = memoryview(data)
+        header, _, hlen = _parse_head(mv)
+        off = PREAMBLE + hlen
+        leaves = []
+        for blen, meta in zip(header["buf_lens"], header["leaves"]):
+            leaves.append(_decode_leaf(mv[off:off + blen], meta, copy))
+            off += blen
     tree = (_unflatten(header["template"], leaves)
             if header["template"] is not None else None)
     return header["meta"], tree

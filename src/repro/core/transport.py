@@ -1,13 +1,21 @@
 """Transport channels between host and destination nodes.
 
 * ``LoopbackChannel``  — in-process queue pair (tests, same-process demos).
+                         Vectored ``Frame``s pass through untouched (true
+                         zero-copy in-process).
 * ``TCPChannel``       — real sockets with length-prefixed frames (the paper's
-                         Boost-ASIO analogue); ``TCPServer`` runs a
+                         Boost-ASIO analogue).  Sends vectored frames with
+                         ``socket.sendmsg`` scatter-gather (no join copy) and
+                         receives with ``recv_into`` a preallocated per-frame
+                         buffer (no chunk-list join).  ``TCPServer`` runs a
                          DestinationExecutor behind a listening socket.
 * ``SimulatedChannel`` — loopback + a virtual clock charging the calibrated
                          link model (latency + bytes/bandwidth + destination
                          serialization rate).  Used to reproduce the paper's
                          test-bed numbers on this CPU-only container.
+
+Framing on the wire: ``[8B u64 little-endian length][frame bytes]`` where the
+frame itself carries the AVEC preamble (see ``core.serialization``).
 """
 from __future__ import annotations
 
@@ -18,27 +26,42 @@ import threading
 import time
 from typing import Callable, Optional
 
+from repro.core.serialization import Frame
+
 
 class ChannelClosed(Exception):
     pass
 
 
 class Channel:
-    """Bidirectional message channel (bytes in, bytes out)."""
+    """Bidirectional message channel (bytes or vectored Frames in, bytes-like
+    out)."""
 
-    def send(self, data: bytes) -> None:
+    def send(self, data) -> None:
         raise NotImplementedError
 
-    def recv(self, timeout: Optional[float] = None) -> bytes:
+    def recv(self, timeout: Optional[float] = None):
         raise NotImplementedError
 
     def close(self) -> None:
         pass
 
     # RPC convenience -------------------------------------------------------
-    def request(self, data: bytes, timeout: Optional[float] = None) -> bytes:
+    def request(self, data, timeout: Optional[float] = None):
         self.send(data)
         return self.recv(timeout)
+
+
+class DirectChannel(Channel):
+    """Zero-transport channel: requests go straight into an executor-style
+    handler (``handle(bytes) -> bytes``) in-process.  The standard shim for
+    tests, benchmarks, and demos that don't need sockets."""
+
+    def __init__(self, executor) -> None:
+        self.executor = executor
+
+    def request(self, data, timeout=None):
+        return self.executor.handle(data)
 
 
 # ---------------------------------------------------------------------------
@@ -55,12 +78,12 @@ class LoopbackChannel(Channel):
         a, b = queue.Queue(), queue.Queue()
         return LoopbackChannel(a, b), LoopbackChannel(b, a)
 
-    def send(self, data: bytes) -> None:
+    def send(self, data) -> None:
         if self._closed:
             raise ChannelClosed
         self._tx.put(data)
 
-    def recv(self, timeout: Optional[float] = None) -> bytes:
+    def recv(self, timeout: Optional[float] = None):
         try:
             data = self._rx.get(timeout=timeout)
         except queue.Empty:
@@ -78,47 +101,174 @@ class LoopbackChannel(Channel):
 # TCP
 # ---------------------------------------------------------------------------
 
-def _send_frame(sock: socket.socket, data: bytes) -> None:
-    sock.sendall(struct.pack("<Q", len(data)) + data)
+_IOV_MAX = 512          # segments per sendmsg call (conservative vs IOV_MAX)
 
 
-def _recv_exact(sock: socket.socket, n: int) -> bytes:
-    chunks = []
-    while n > 0:
-        c = sock.recv(min(n, 1 << 20))
-        if not c:
-            raise ChannelClosed("socket closed")
-        chunks.append(c)
-        n -= len(c)
-    return b"".join(chunks)
+def _segments(data) -> list:
+    """Normalize bytes | Frame into a flat list of memoryview segments."""
+    if isinstance(data, Frame):
+        return [s if isinstance(s, memoryview) else memoryview(s)
+                for s in data.segments]
+    return [memoryview(data)]
 
 
-def _recv_frame(sock: socket.socket) -> bytes:
-    (n,) = struct.unpack("<Q", _recv_exact(sock, 8))
-    return _recv_exact(sock, n)
+def _sendmsg_all(sock: socket.socket, segments: list) -> None:
+    """Scatter-gather send of every segment, handling partial sends."""
+    pending = [s for s in segments if len(s)]
+    while pending:
+        try:
+            n = sock.sendmsg(pending[:_IOV_MAX])
+        except AttributeError:  # pragma: no cover - platforms without sendmsg
+            for s in pending:
+                sock.sendall(s)
+            return
+        while n:
+            if n >= len(pending[0]):
+                n -= len(pending[0])
+                pending.pop(0)
+            else:
+                pending[0] = pending[0][n:]
+                n = 0
+
+
+def _send_frame(sock: socket.socket, data) -> None:
+    segs = _segments(data)
+    total = sum(len(s) for s in segs)
+    _sendmsg_all(sock, [memoryview(struct.pack("<Q", total)), *segs])
+
+
+def _recv_into_exact(sock: socket.socket, view: memoryview) -> int:
+    """Fill ``view`` from the socket.  Raises _PartialRead(got) if a timeout
+    (python-level or SO_RCVTIMEO's EAGAIN) interrupts mid-fill."""
+    got = 0
+    try:
+        while got < len(view):
+            n = sock.recv_into(view[got:], len(view) - got)
+            if n == 0:
+                raise ChannelClosed("socket closed")
+            got += n
+    except (socket.timeout, BlockingIOError, InterruptedError):
+        raise _PartialRead(got)
+    return got
+
+
+def _set_rcvtimeo(sock: socket.socket, timeout) -> bool:
+    """Arm a RECEIVE-direction-only timeout via SO_RCVTIMEO (0 = blocking).
+    Unlike ``settimeout``, this cannot leak into a concurrent send on the
+    same socket (full-duplex pipelined channels).  Returns False where the
+    option is unavailable so callers can fall back to ``settimeout``."""
+    t = 0.0 if timeout is None else max(float(timeout), 1e-6)
+    try:
+        sec = int(t)
+        usec = int((t - sec) * 1e6)
+        sock.setsockopt(socket.SOL_SOCKET, socket.SO_RCVTIMEO,
+                        struct.pack("@ll", sec, usec))
+        return True
+    except (AttributeError, OSError):  # pragma: no cover - non-POSIX
+        return False
+
+
+class _PartialRead(Exception):
+    def __init__(self, got: int) -> None:
+        super().__init__(f"timeout after {got} bytes")
+        self.got = got
+
+
+def _recv_frame(sock: socket.socket) -> bytearray:
+    """Blocking frame receive into one preallocated buffer (server side)."""
+    hdr = bytearray(8)
+    try:
+        _recv_into_exact(sock, memoryview(hdr))
+        (n,) = struct.unpack("<Q", hdr)
+        buf = bytearray(n)
+        _recv_into_exact(sock, memoryview(buf))
+    except _PartialRead as e:
+        raise ChannelClosed(str(e))
+    return buf
 
 
 class TCPChannel(Channel):
     def __init__(self, sock: socket.socket) -> None:
         self._sock = sock
         self._lock = threading.Lock()
+        self._rlock = threading.Lock()
+        self._broken = False
 
     @staticmethod
     def connect(host: str, port: int, timeout: float = 10.0) -> "TCPChannel":
         sock = socket.create_connection((host, port), timeout=timeout)
         sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        sock.settimeout(None)       # connect timeout must not leak to I/O
         return TCPChannel(sock)
 
-    def send(self, data: bytes) -> None:
+    def send(self, data) -> None:
+        if self._broken:
+            raise ChannelClosed("channel failed on a previous partial frame")
         with self._lock:
-            _send_frame(self._sock, data)
+            try:
+                _send_frame(self._sock, data)
+            except socket.timeout:
+                # a timeout can hit sendmsg when a concurrent recv set a
+                # short per-call timeout on the shared socket; the frame may
+                # be partially written, so the stream is unframeable — fail
+                # the channel rather than let the next send corrupt it
+                self._fail()
+                raise TimeoutError(
+                    "tcp send timed out mid-frame; channel failed")
 
-    def recv(self, timeout: Optional[float] = None) -> bytes:
-        self._sock.settimeout(timeout)
+    def recv(self, timeout: Optional[float] = None):
+        """Receive one frame into a fresh preallocated buffer.
+
+        The per-call timeout is armed with SO_RCVTIMEO (receive direction
+        only — a concurrent ``send`` on this full-duplex socket must not
+        inherit it) and disarmed afterwards; where SO_RCVTIMEO is
+        unavailable it falls back to ``settimeout`` with restore.  A timeout
+        *mid-frame* leaves the stream unframeable, so the channel is failed
+        cleanly: marked broken and closed; only a timeout before the first
+        length byte is retryable."""
+        with self._rlock:
+            if self._broken:
+                raise ChannelClosed("channel failed on a previous partial frame")
+            via_rcvtimeo = _set_rcvtimeo(self._sock, timeout)
+            prev = None
+            if not via_rcvtimeo:
+                prev = self._sock.gettimeout()
+                self._sock.settimeout(timeout)
+            try:
+                hdr = bytearray(8)
+                try:
+                    _recv_into_exact(self._sock, memoryview(hdr))
+                except _PartialRead as e:
+                    if e.got == 0:          # clean timeout: stream intact
+                        raise TimeoutError("tcp recv timeout")
+                    self._fail()
+                    raise TimeoutError(
+                        f"tcp recv timeout mid-header ({e.got}/8B); channel failed")
+                (n,) = struct.unpack("<Q", hdr)
+                buf = bytearray(n)
+                try:
+                    _recv_into_exact(self._sock, memoryview(buf))
+                except _PartialRead as e:
+                    self._fail()
+                    raise TimeoutError(
+                        f"tcp recv timeout mid-frame ({e.got}/{n}B); channel failed")
+                return buf
+            finally:
+                if not self._broken:
+                    try:
+                        if via_rcvtimeo:
+                            _set_rcvtimeo(self._sock, None)
+                        else:
+                            self._sock.settimeout(prev)
+                    except OSError:
+                        pass
+
+    def _fail(self) -> None:
+        self._broken = True
         try:
-            return _recv_frame(self._sock)
-        except socket.timeout:
-            raise TimeoutError("tcp recv timeout")
+            self._sock.close()
+        except OSError:
+            pass
 
     def close(self) -> None:
         try:
@@ -129,36 +279,55 @@ class TCPChannel(Channel):
 
 
 class TCPServer:
-    """Accepts connections and feeds frames to a handler: bytes -> bytes."""
+    """Accepts connections and feeds frames to a handler: bytes -> bytes/Frame.
 
-    def __init__(self, handler: Callable[[bytes], bytes], host: str = "127.0.0.1",
-                 port: int = 0) -> None:
+    The per-connection loop is intentionally serial (recv -> handle -> send):
+    a pipelined host keeps the connection's kernel buffer primed, so the next
+    frame is a local memcpy away; an in-process read-ahead thread was
+    measured to LOSE throughput to GIL contention with the handler.  Client
+    threads are reaped as connections finish (no unbounded growth) and
+    ``stop()`` joins the live ones with a timeout."""
+
+    def __init__(self, handler: Callable, host: str = "127.0.0.1",
+                 port: int = 0, join_timeout: float = 2.0) -> None:
         self._handler = handler
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind((host, port))
         self._sock.listen(16)
         self.port = self._sock.getsockname()[1]
+        self.join_timeout = join_timeout
         self._stop = threading.Event()
+        self._lock = threading.Lock()
+        self._threads: list[threading.Thread] = []
+        self._conns: list[socket.socket] = []
         self._thread = threading.Thread(target=self._serve, daemon=True)
 
     def start(self) -> "TCPServer":
         self._thread.start()
         return self
 
+    def live_client_threads(self) -> int:
+        with self._lock:
+            return sum(t.is_alive() for t in self._threads)
+
     def _serve(self) -> None:
         self._sock.settimeout(0.2)
-        threads = []
         while not self._stop.is_set():
             try:
                 conn, _ = self._sock.accept()
             except socket.timeout:
+                with self._lock:   # reap finished client threads
+                    self._threads = [t for t in self._threads if t.is_alive()]
                 continue
             except OSError:
                 break
             t = threading.Thread(target=self._client, args=(conn,), daemon=True)
+            with self._lock:
+                self._threads = [x for x in self._threads if x.is_alive()]
+                self._threads.append(t)
+                self._conns.append(conn)
             t.start()
-            threads.append(t)
 
     def _client(self, conn: socket.socket) -> None:
         conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
@@ -169,6 +338,9 @@ class TCPServer:
         except (ChannelClosed, OSError):
             pass
         finally:
+            with self._lock:
+                if conn in self._conns:
+                    self._conns.remove(conn)
             conn.close()
 
     def stop(self) -> None:
@@ -177,6 +349,19 @@ class TCPServer:
             self._sock.close()
         except OSError:
             pass
+        with self._lock:
+            conns, threads = list(self._conns), list(self._threads)
+        for conn in conns:      # unblock client threads parked in recv
+            try:
+                conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+        deadline = time.monotonic() + self.join_timeout
+        self._thread.join(timeout=self.join_timeout)
+        for t in threads:
+            t.join(timeout=max(deadline - time.monotonic(), 0.05))
+        with self._lock:
+            self._threads = [t for t in self._threads if t.is_alive()]
 
 
 # ---------------------------------------------------------------------------
@@ -218,11 +403,11 @@ class SimulatedChannel(Channel):
             t += nbytes / self.serialize_rate
         self.clock.charge(t, f"{self.name}.{direction}")
 
-    def send(self, data: bytes) -> None:
+    def send(self, data) -> None:
         self._charge(len(data), "send")
         self._inner.send(data)
 
-    def recv(self, timeout: Optional[float] = None) -> bytes:
+    def recv(self, timeout: Optional[float] = None):
         data = self._inner.recv(timeout)
         self._charge(len(data), "recv")
         return data

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams as _CompilerParams
+
 
 def _quant_kernel(x_ref, q_ref, s_ref):
     x = x_ref[...].astype(jnp.float32)                   # (br, D)
@@ -44,7 +46,7 @@ def quantize_int8(x, *, br: int = 256, interpret: bool = False):
                    pl.BlockSpec((br, 1), lambda i: (i, 0))],
         out_shape=[jax.ShapeDtypeStruct(xf.shape, jnp.int8),
                    jax.ShapeDtypeStruct((xf.shape[0], 1), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(xf)
@@ -67,7 +69,7 @@ def dequantize_int8(q, scale, dtype=jnp.float32, *, br: int = 256,
                   pl.BlockSpec((br, 1), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(qf.shape, dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(qf, sf)

@@ -1,0 +1,14 @@
+"""Pallas-TPU version compatibility.
+
+``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams`` across jax
+releases; resolve whichever this jax ships so kernels run on both."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+if CompilerParams is None:  # fail at import with the real cause, not a
+    raise ImportError(      # NoneType call deep inside pallas_call
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; unsupported jax version")

@@ -13,12 +13,17 @@ Decode-centric design (the AVEC destination's serving loop):
 
 The engine is transport-agnostic: run it locally, or behind a
 DestinationExecutor so AVEC hosts stream requests to it.
+``PipelinedOffloadFrontend`` (below) is the host half of that pairing: it
+fans independent requests out over one pipelined AVEC channel so transfer
+overlaps destination compute, and a coalescing destination micro-batches
+them into stacked dispatches.
 """
 from __future__ import annotations
 
 import collections
+from concurrent.futures import Future
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -152,6 +157,50 @@ class ServingEngine:
         for r in reqs:
             done[r.rid] = r.generated
         return done
+
+
+# ---------------------------------------------------------------------------
+# Pipelined AVEC serving frontend (host side)
+# ---------------------------------------------------------------------------
+
+class PipelinedOffloadFrontend:
+    """Streams independent serving requests to a remote engine/library over a
+    :class:`~repro.core.executor.PipelinedHostRuntime`.
+
+    Up to the runtime's ``max_in_flight`` requests are on the wire at once
+    (request k+1 serializes while request k computes at the destination).
+    Only stateless per-request ops belong here (score/prefill of independent
+    prompts, vision encoders) — stateful decode streams must stay ordered on
+    one session.
+
+    ``batchable=True`` lets a coalescing
+    :class:`~repro.core.executor.DestinationExecutor` stack compatible
+    requests into one device dispatch — but coalescing happens across
+    *concurrent* server-side calls, and a single TCP connection is served
+    serially, so it only pays off when several frontends/connections hit the
+    same destination; over one connection it just adds the coalescing window
+    to each request's latency.  Hence the default is False."""
+
+    def __init__(self, runtime, fp: str, fn: str, *,
+                 batchable: bool = False) -> None:
+        self.runtime = runtime
+        self.fp = fp
+        self.fn = fn
+        self.batchable = batchable
+        self.submitted = 0
+
+    def submit(self, args: Any) -> Future:
+        """Async submit; Future resolves to the output tree (waiting on it
+        pumps the channel — the pipelined runtime has no reader thread)."""
+        self.submitted += 1
+        inner = self.runtime.run_async(self.fp, self.fn, args,
+                                       batchable=self.batchable)
+        return self.runtime.chain(inner, lambda meta, tree: tree)
+
+    def map(self, requests: dict) -> dict:
+        """Submit ``{rid: args}`` keeping the pipeline full; gather all."""
+        futs = {rid: self.submit(args) for rid, args in requests.items()}
+        return {rid: fut.result() for rid, fut in futs.items()}
 
 
 # ---------------------------------------------------------------------------

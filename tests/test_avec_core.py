@@ -27,12 +27,7 @@ from repro.core.virtualization import CLOUD_RTX, JETSON_NANO, JETSON_TX2
 from repro.models import model as M
 
 
-class DirectChannel(Channel):
-    def __init__(self, executor):
-        self.executor = executor
-
-    def request(self, data, timeout=None):
-        return self.executor.handle(data)
+from repro.core.transport import DirectChannel  # shared in-process shim
 
 
 def _make_session(cfg=None, codec="raw", name="dest"):

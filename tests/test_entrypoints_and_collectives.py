@@ -43,7 +43,10 @@ def test_dcn_wire_accounting():
 
 def test_compressed_psum_single_axis():
     """compressed_psum == psum(quant-dequant) numerics on a 1-device mesh."""
-    from jax.sharding import AxisType
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        pytest.skip("jax.sharding.AxisType not in this jax version")
     from repro.optim.compression import compressed_psum
     mesh = jax.make_mesh((1,), ("pod",), axis_types=(AxisType.Auto,))
     x = jax.random.normal(jax.random.PRNGKey(0), (16, 32))

@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not in this image")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.serialization import (eq1_bytes, pack_message, tree_wire_bytes,
                                       unpack_message)
