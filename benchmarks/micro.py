@@ -140,12 +140,13 @@ def spawn_openpose_destination():
     return proc, int(line)
 
 
-def _openpose_offload_walls(frames: int, in_flight: int) -> tuple[float, float]:
-    """(sync_wall_s, pipelined_wall_s) for N OpenPose-lite frames over
-    loopback TCP to a destination in its own process, model resident and jit
-    warm in both cases.  (Co-locating the destination in this process makes
-    "overlap" impossible — one GIL — and was measured to invert the
-    comparison.)"""
+def _openpose_offload_walls(frames: int,
+                            in_flight: int) -> tuple[float, float, dict]:
+    """(sync_wall_s, pipelined_wall_s, pipelined runtime stats) for N
+    OpenPose-lite frames over loopback TCP to a destination in its own
+    process, model resident and jit warm in both cases.  (Co-locating the
+    destination in this process makes "overlap" impossible — one GIL — and
+    was measured to invert the comparison.)"""
     import repro.models.openpose as op
     from repro.core.executor import HostRuntime, PipelinedHostRuntime
     from repro.core.transport import TCPChannel
@@ -187,11 +188,77 @@ def _openpose_offload_walls(frames: int, in_flight: int) -> tuple[float, float]:
             sync_walls.append(sync_pass())
             pipe_walls.append(pipe_pass())
         t_sync, t_pipe = min(sync_walls), min(pipe_walls)
+        rt_stats = pipe_rt.stats()
         sync_rt.close()
         pipe_rt.close()
     finally:
         proc.terminate()
-    return t_sync, t_pipe
+    return t_sync, t_pipe, rt_stats
+
+
+def backpressure_probe(frames: int = 6, frame_floats: int = 128 * 1024,
+                       bufsize: int = 8192, max_in_flight: int = 4,
+                       timeout: float = 60.0) -> dict:
+    """Pipelined transfer through shrunken SO_SNDBUF/SO_RCVBUF against a
+    serial (recv -> handle -> send) echo destination — the configuration
+    that deadlocked the PR-1 blocking send path.  Verifies every echoed
+    payload and returns the runtime's backpressure counters + wall time.
+    Shared by the smoke bench (BENCH_dataplane.json) and the deadlock
+    regression test."""
+    import socket
+    import threading
+
+    from repro.core.executor import PipelinedHostRuntime
+    from repro.core.serialization import (frame_request_id, pack_message,
+                                          unpack_message)
+    from repro.core.transport import (ChannelClosed, TCPChannel, _recv_frame,
+                                      _send_frame)
+
+    a, b = socket.socketpair()
+    for s in (a, b):
+        s.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, bufsize)
+        s.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, bufsize)
+    stop = threading.Event()
+
+    def destination():
+        try:
+            while not stop.is_set():
+                req = _recv_frame(b)
+                rid = frame_request_id(req)
+                _, tree = unpack_message(req)
+                _send_frame(b, pack_message(
+                    {"ok": True, "compute_s": 1e-3},
+                    {"y": np.asarray(tree["x"]) + 1.0}, request_id=rid))
+        except (ChannelClosed, OSError):
+            pass
+
+    t = threading.Thread(target=destination, daemon=True)
+    t.start()
+    rt = PipelinedHostRuntime(TCPChannel(a), max_in_flight=max_in_flight,
+                              timeout=timeout)
+    xs = [np.full(frame_floats, float(i), np.float32) for i in range(frames)]
+    t0 = time.perf_counter()
+    futs = [rt.submit({"op": "noop"}, {"x": x}) for x in xs]
+    verified = True
+    for x, f in zip(xs, futs):
+        _, out = rt.wait(f, timeout=timeout)
+        verified = verified and bool(np.array_equal(out["y"], x + 1.0))
+    wall = time.perf_counter() - t0
+    stats = rt.stats()
+    stop.set()
+    rt.close()
+    t.join(timeout=5)
+    return {
+        "frames": frames,
+        "frame_bytes": frame_floats * 4,
+        "socket_buffer_bytes": bufsize,
+        "wall_s": wall,
+        "verified": verified,
+        "send_stalls": stats["send_stalls"],
+        "sends_resumed": stats["sends_resumed"],
+        "window": stats["window"],
+        "requests_completed": stats["requests_completed"],
+    }
 
 
 def _coalesce_walls(clients: int = 8, reps: int = 4) -> tuple[float, float, dict]:
@@ -248,10 +315,13 @@ def _coalesce_walls(clients: int = 8, reps: int = 4) -> tuple[float, float, dict
 
 def dataplane_report(frames: int = 8, in_flight: int = 4) -> dict:
     """The BENCH_dataplane.json payload: serialize throughput vs the seed
-    path, pipelined-vs-sync offload walls, and coalesced dispatch walls."""
+    path, pipelined-vs-sync offload walls (with the adaptive window the
+    runtime chose), small-socket-buffer backpressure counters, and coalesced
+    dispatch walls."""
     t = _serialize_timings(n=100)
     nb = t["nbytes"]
-    t_sync, t_pipe = _openpose_offload_walls(frames, in_flight)
+    t_sync, t_pipe, pipe_stats = _openpose_offload_walls(frames, in_flight)
+    bp = backpressure_probe()
     t_plain, t_coal, stats = _coalesce_walls()
     return {
         "serialize_raw_512x512": {
@@ -268,7 +338,12 @@ def dataplane_report(frames: int = 8, in_flight: int = 4) -> dict:
             "sync_wall_s": t_sync,
             "pipelined_wall_s": t_pipe,
             "speedup": t_sync / t_pipe,
+            "adaptive_window": pipe_stats["window"],
+            "send_stalls": pipe_stats["send_stalls"],
+            "wire_ema_s": pipe_stats["wire_ema_s"],
+            "compute_ema_s": pipe_stats["compute_ema_s"],
         },
+        "backpressure_small_sockbuf": bp,
         "coalesced_dispatch": {
             "clients": 8, "reps": 4,
             "uncoalesced_wall_s": t_plain,

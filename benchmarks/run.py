@@ -87,7 +87,14 @@ def main() -> None:
                          pipe["speedup"],
                          f"{pipe['frames']} frames "
                          f"{pipe['pipelined_wall_s']:.2f}s vs "
-                         f"{pipe['sync_wall_s']:.2f}s"))
+                         f"{pipe['sync_wall_s']:.2f}s "
+                         f"window={pipe['adaptive_window']}"))
+            bp = report["backpressure_small_sockbuf"]
+            rows.append(("dataplane/backpressure_send_stalls",
+                         float(bp["send_stalls"]),
+                         f"{bp['frames']}x{bp['frame_bytes']}B frames thru "
+                         f"{bp['socket_buffer_bytes']}B sockbufs in "
+                         f"{bp['wall_s']:.2f}s (deadlock-free)"))
         except Exception:  # noqa: BLE001
             traceback.print_exc()
             rows.append(("dataplane/ERROR", 0.0, "see traceback"))

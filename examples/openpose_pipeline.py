@@ -117,6 +117,12 @@ def _run_demo(dest_port: int) -> None:
     print(f"\npipelined offload (2 in flight): {len(beliefs)} frames "
           f"{wall_pipe:.2f}s vs synchronous {wall_sync:.2f}s "
           f"— {wall_sync / wall_pipe:.2f}x")
+    ps = prt.stats()
+    print(f"  adaptive window {ps['window']}/{ps['max_in_flight']} "
+          f"(wire~{ps['wire_ema_s'] * 1e3:.1f}ms "
+          f"compute~{ps['compute_ema_s'] * 1e3:.1f}ms); "
+          f"send stalls {ps['send_stalls']}, recv retries "
+          f"{ps['recv_retries']}")
     prt.close()
 
     print("\npaper test-bed simulation (calibrated cost model, Table IV):")

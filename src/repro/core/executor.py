@@ -29,13 +29,41 @@ dominating the cycle; these are the levers that shrink it):
   dispatch overhead across clients.  Stateful ops (decode) must not set
   ``batchable``.
 * **Pipelined host** (``PipelinedHostRuntime``): keeps up to N request
-  frames in flight on one channel with a reader thread matching responses
-  by frame id — frame k+1 serializes and transmits while frame k computes
-  at the destination (double-buffered offload).
+  frames in flight on one channel, matching responses by frame id — frame
+  k+1 serializes and transmits while frame k computes at the destination
+  (double-buffered offload).
+* **Resumable, backpressure-aware sends**: over TCP, request frames go out
+  through a non-blocking resumable state machine
+  (``TCPChannel.try_send_resume``).  When the kernel send buffer fills —
+  the byte-level backpressure of a narrow real link — the submitter parks
+  the partial frame and pumps RECEIVES until the socket is writable again,
+  so host and destination can never deadlock on mutually-full buffers.
+* **Adaptive in-flight window**: ``max_in_flight`` is a cap, not the
+  operating point.  The runtime sizes the live window from the observed
+  comm/compute ratio (per-response ``compute_s`` vs measured wire time):
+  ~2 when destination compute dominates (double buffering suffices), and
+  growing toward the cap as the link dominates.
+
+Runtime stats (``PipelinedHostRuntime.stats()``) — exported to
+``DeviceAwareScheduler.record_runtime_stats`` and
+``serving.PipelinedOffloadFrontend.stats``:
+
+  bytes_sent / bytes_received   wire totals (cv-protected counters)
+  in_flight                     currently outstanding requests
+  window / max_in_flight        chosen adaptive window and its configured cap
+  send_stalls                   would-block events on the send path
+                                (byte-level backpressure hits)
+  sends_resumed                 frames that needed >1 non-blocking attempt
+  recv_retries                  clean channel recv timeouts retried inside
+                                the pump (caller deadline not yet expired)
+  requests_completed            responses dispatched to futures
+  wire_ema_s / compute_ema_s    the smoothed comm/compute estimates driving
+                                the window controller
 """
 from __future__ import annotations
 
 import itertools
+import math
 import queue
 import threading
 import time
@@ -47,9 +75,10 @@ import jax
 import numpy as np
 
 from repro.core.cache import ModelCache
-from repro.core.serialization import (Frame, frame_request_id, pack_message,
+from repro.core.serialization import (Frame, frame_preamble_ok,
+                                      frame_request_id, pack_message,
                                       unpack_message)
-from repro.core.transport import Channel, ChannelClosed
+from repro.core.transport import Channel, ChannelClosed, ProtocolError
 
 
 class RemoteError(RuntimeError):
@@ -197,10 +226,20 @@ class DestinationExecutor:
 
     # ------------------------------------------------------------------
     def handle(self, raw) -> Frame:
-        """bytes/Frame in -> response Frame (request id echoed)."""
-        rid = 0
+        """bytes/Frame in -> response Frame (request id echoed).
+
+        A frame whose preamble is unreadable cannot be answered addressably:
+        a rid-0 error response would be dropped by a pipelined host and the
+        caller's future would hang until timeout.  Such frames raise
+        :class:`~repro.core.transport.ProtocolError` so the transport tears
+        the connection down loudly; per-request failures past a readable
+        preamble still echo the real request id."""
+        if not frame_preamble_ok(raw):
+            raise ProtocolError(
+                f"executor {self.name}: unreadable frame preamble "
+                f"({len(raw)}B) — connection must be dropped")
+        rid = frame_request_id(raw)
         try:
-            rid = frame_request_id(raw)
             meta, tree = unpack_message(raw)
             if self.fail:
                 raise RuntimeError(f"executor {self.name} marked failed")
@@ -370,6 +409,46 @@ class HostRuntime:
         self.channel.close()
 
 
+class _WindowController:
+    """Adaptive in-flight window from the observed comm/compute ratio.
+
+    Hiding the wire behind destination compute needs roughly
+    ``1 + comm/compute`` frames in flight: ~2 when compute dominates
+    (classic double buffering), more as the link dominates.  Observations
+    are EMA-smoothed; the chosen window is clamped to
+    ``[min(2, cap), cap]``.  The window STARTS at the cap — a fresh
+    runtime must not throttle a destination that batches its first burst —
+    and adapts once responses carry measurements.  Callers must serialize
+    ``observe`` externally (the runtime calls it under its condition
+    variable)."""
+
+    def __init__(self, cap: int, alpha: float = 0.25) -> None:
+        self.cap = max(int(cap), 1)
+        self.alpha = alpha
+        self.floor = min(2, self.cap)
+        self.window = self.cap
+        self.wire_ema = 0.0
+        self.compute_ema = 0.0
+        self.observations = 0
+
+    def observe(self, wire_s: float, compute_s: float) -> int:
+        """Fold one completed request's (measured wire seconds, reported
+        destination-compute seconds) into the window choice."""
+        a = self.alpha
+        if self.observations == 0:
+            self.wire_ema, self.compute_ema = wire_s, compute_s
+        else:
+            self.wire_ema = (1 - a) * self.wire_ema + a * wire_s
+            self.compute_ema = (1 - a) * self.compute_ema + a * compute_s
+        self.observations += 1
+        # ratio capped so a ~zero compute_s cannot overflow; the window is
+        # clamped to the configured cap anyway
+        ratio = self.wire_ema / max(self.compute_ema, 1e-6)
+        need = 1 + math.ceil(min(ratio, float(self.cap)))
+        self.window = max(self.floor, min(need, self.cap))
+        return self.window
+
+
 class _PipelinedFuture(Future):
     """Future that pumps its runtime's channel inside ``result()`` /
     ``exception()`` — with no reader thread, the waiter is the receiver."""
@@ -408,26 +487,46 @@ class PipelinedHostRuntime(HostRuntime):
 
     Requires a channel with independent ``send``/``recv`` (TCP, loopback);
     sync ops (``ping``/``put_model``/...) go through the same pipelined path
-    and simply wait on their own future."""
+    and simply wait on their own future.
+
+    ``max_in_flight`` is the window CAP.  With ``adaptive_window=True`` (the
+    default) the live window is sized from the observed comm/compute ratio
+    — see :class:`_WindowController` and the module docstring's stats table.
+    Over channels exposing the resumable-send API (``begin_send`` /
+    ``try_send_resume``, i.e. TCP), a request frame is written
+    non-blockingly: when the kernel send buffer fills, the submitter pumps
+    receives until the socket is writable again instead of blocking —
+    byte-level backpressure without the PR-1 mutual-stall deadlock."""
 
     def __init__(self, channel: Channel, codec: str = "raw",
                  timeout: float = 120.0, copy_results: bool = False,
-                 max_in_flight: int = 4) -> None:
+                 max_in_flight: int = 4, adaptive_window: bool = True) -> None:
         super().__init__(channel, codec, timeout, copy_results)
         self.max_in_flight = max_in_flight
+        self.adaptive_window = adaptive_window
+        self._window = _WindowController(max_in_flight)
         self._pending: dict[int, Future] = {}
+        self._track: dict[int, tuple[float, int]] = {}  # rid -> (t0, depth)
         self._cv = threading.Condition()
         self._receiving = False
         self._slock = threading.Lock()
         self._rid = itertools.count(1)
         self._closed = False
         self._broken: BaseException | None = None
+        self._send_stalls = 0
+        self._sends_resumed = 0
+        self._recv_retries = 0
+        self._requests_completed = 0
 
     # ------------------------------------------------------------------
     def submit(self, meta: dict, tree=None, codec: str = "raw") -> Future:
         """Send one request frame; returns a Future of (rmeta, rtree).
-        Blocks (pumping responses) only when ``max_in_flight`` requests are
-        already outstanding (backpressure).
+        Blocks (pumping responses) only when the adaptive window's worth of
+        requests is already outstanding (request-level backpressure), or —
+        on a resumable-send channel — while the kernel send buffer is full
+        (byte-level backpressure), in which case the stalled send pumps
+        receives between attempts so the link can never deadlock on
+        mutually-full socket buffers.
 
         Zero-copy contract: raw-codec leaves are sent as views over the
         caller's arrays.  Over TCP the kernel copies during this call, but
@@ -435,30 +534,107 @@ class PipelinedHostRuntime(HostRuntime):
         until the destination drains it — don't mutate submitted arrays
         before their future resolves.
 
-        Known limit: the send itself blocks without pumping receives, so on
-        a real narrow link whose socket buffers are smaller than (window x
-        frame size), host and destination can both stall on full buffers.
-        Size ``max_in_flight`` x request bytes within the link's buffering,
-        or keep responses drained from another thread; resumable sends that
-        pump receives are a roadmap item."""
+        Platform note: byte-level backpressure needs per-call non-blocking
+        sends (``MSG_DONTWAIT``; see ``TCPChannel.supports_resumable_send``).
+        On platforms without it the legacy blocking send path is used, and
+        the old sizing rule applies: keep ``max_in_flight`` x request bytes
+        within the link's socket buffering or both ends can stall."""
         if self._closed:
             raise ChannelClosed("pipelined runtime closed")
         rid = next(self._rid)
         fut = self.make_future()
-        # window check and pending insertion must be one atomic step under
-        # the cv, or concurrent submitters can exceed max_in_flight
-        self._pump_until(lambda: len(self._pending) < self.max_in_flight,
-                         on_pass=lambda: self._pending.__setitem__(rid, fut))
+
+        def _admit() -> None:
+            # window check and pending insertion are one atomic step under
+            # the cv, or concurrent submitters could exceed the window; the
+            # (send time, queue depth) snapshot feeds the window controller
+            self._pending[rid] = fut
+            self._track[rid] = (time.monotonic(), len(self._pending))
+        self._pump_until(lambda: len(self._pending) < self._window.window,
+                         on_pass=_admit)
         try:
             req = pack_message(meta, tree, codec=codec, request_id=rid)
+            deadline = time.monotonic() + self.timeout
             with self._slock:
+                self._send_frame_pumping(req, deadline)
+            with self._cv:
                 self.bytes_sent += len(req)
-                self.channel.send(req)
         except BaseException:
             with self._cv:
                 self._pending.pop(rid, None)
-            raise
+                self._track.pop(rid, None)
+                self._cv.notify_all()   # a window slot just freed: re-wake
+            raise                       # submitters parked on the predicate
         return fut
+
+    # ------------------------------------------------------------------
+    def _send_frame_pumping(self, req, deadline: float) -> None:
+        """Write one request frame without ever blocking on a full socket
+        buffer while responses are undrained.
+
+        On channels exposing the resumable-send API the frame goes out via
+        non-blocking attempts; each would-block stall either drains one
+        response (as the designated receiver) or waits for writability while
+        another thread receives.  Channels whose ``send`` cannot block
+        mid-frame against the peer (loopback, simulated, direct) use the
+        plain blocking path.  Caller holds ``_slock`` (frames are atomic
+        wire units)."""
+        ch = self.channel
+        if not getattr(ch, "supports_resumable_send", False):
+            ch.send(req)
+            return
+        state = ch.begin_send(req)
+        try:
+            if ch.try_send_resume(state):
+                return
+            with self._cv:
+                self._sends_resumed += 1
+                self._send_stalls += 1
+            while True:
+                now = time.monotonic()
+                if now >= deadline:
+                    raise TimeoutError(
+                        "pipelined send timeout under backpressure "
+                        f"({state.sent}/{state.total}B written)")
+                became_receiver = False
+                with self._cv:
+                    if self._broken is not None:
+                        raise self._broken
+                    if not self._receiving:
+                        self._receiving = True
+                        became_receiver = True
+                if became_receiver:
+                    try:
+                        readable, _ = ch.wait_io(
+                            read=True, write=True,
+                            timeout=min(0.2, deadline - now))
+                    except BaseException as e:
+                        self._fail_pending(e)
+                        raise
+                    if readable:
+                        self._recv_dispatch_once()
+                    else:
+                        self._release_receiver()
+                else:
+                    # someone else is draining responses; sleep until the
+                    # kernel will take more bytes (or their dispatch wakes
+                    # the cv)
+                    ch.wait_io(read=False, write=True, timeout=0.05)
+                if ch.try_send_resume(state):
+                    return
+                with self._cv:
+                    self._send_stalls += 1
+        except BaseException:
+            # a partially-written frame left on the wire tears the framing
+            # for every later request: fail the channel (and all pending
+            # futures) rather than let the next send corrupt the stream
+            if state.sent and not state.done:
+                if hasattr(ch, "fail_partial_send"):
+                    ch.fail_partial_send(state)
+                self._fail_pending(ChannelClosed(
+                    "channel failed: frame abandoned mid-send "
+                    f"({state.sent}/{state.total}B written)"))
+            raise
 
     def make_future(self) -> _PipelinedFuture:
         """A Future whose ``result()`` pumps this runtime's channel.  Use for
@@ -504,7 +680,10 @@ class PipelinedHostRuntime(HostRuntime):
         the caller's (short) wait deadline — a short per-future timeout must
         expire that one wait, not interrupt a response mid-frame and fail
         the shared channel for every pending request.  Consequently a wait
-        may overshoot its deadline by up to one in-flight response."""
+        may overshoot its deadline by up to one in-flight response.  A
+        CLEAN channel-level recv timeout (no frame byte seen; stream and
+        channel intact) is not the caller's failure: the pump retries until
+        the caller's own deadline expires (``recv_retries`` in stats)."""
         timeout = self.timeout if timeout is None else timeout
         deadline = time.monotonic() + timeout
         while True:
@@ -523,17 +702,41 @@ class PipelinedHostRuntime(HostRuntime):
                         break
                     if not self._cv.wait(timeout=deadline - time.monotonic()):
                         raise TimeoutError("pipelined rpc timeout")
-            try:
-                data = self.channel.recv(timeout=self.timeout)
-                self._dispatch(data)
-            except TimeoutError:
-                self._release_receiver()
-                raise
-            except BaseException as e:
-                self._fail_pending(e)
-                raise
-            else:
-                self._release_receiver()
+            if not self._recv_dispatch_once():
+                # clean channel timeout: not this caller's failure unless
+                # its own deadline has passed
+                if time.monotonic() >= deadline:
+                    raise TimeoutError("pipelined rpc timeout")
+                with self._cv:
+                    self._recv_retries += 1
+
+    def _recv_dispatch_once(self) -> bool:
+        """As the designated receiver: one blocking recv + dispatch, then
+        release the receiver slot.  Returns False on a CLEAN channel recv
+        timeout (stream intact, receiver released, safe to retry).  Any
+        damage — a mid-frame timeout that broke the channel, a closed
+        socket, a garbled frame — fails every pending future and re-raises."""
+        try:
+            data = self.channel.recv(timeout=self.timeout)
+        except TimeoutError as e:
+            if getattr(self.channel, "broken", False):
+                # mid-frame timeout failed the channel: every pending
+                # response is lost, not just this caller's
+                exc = ChannelClosed(str(e))
+                self._fail_pending(exc)
+                raise exc
+            self._release_receiver()
+            return False
+        except BaseException as e:
+            self._fail_pending(e)
+            raise
+        try:
+            self._dispatch(data)
+        except BaseException as e:
+            self._fail_pending(e)
+            raise
+        self._release_receiver()
+        return True
 
     def _release_receiver(self) -> None:
         with self._cv:
@@ -542,9 +745,15 @@ class PipelinedHostRuntime(HostRuntime):
 
     def _dispatch(self, data) -> None:
         rid = frame_request_id(data)
+        now = time.monotonic()
         with self._cv:
             fut = self._pending.pop(rid, None)
-        self.bytes_received += len(data)
+            track = self._track.pop(rid, None)
+            # shared counters only mutate under the cv (readers of stats()
+            # and concurrent dispatchers must never race a lost update)
+            self.bytes_received += len(data)
+            if fut is not None:
+                self._requests_completed += 1
         if fut is None:
             return
         try:
@@ -552,6 +761,16 @@ class PipelinedHostRuntime(HostRuntime):
         except Exception as e:  # noqa: BLE001
             fut.set_exception(e)
             return
+        if (self.adaptive_window and track is not None
+                and rmeta.get("ok", False) and "compute_s" in rmeta):
+            t0, depth = track
+            compute_s = max(float(rmeta["compute_s"]), 0.0)
+            # wire time = round trip minus the destination-compute queueing
+            # attributable to the requests in flight ahead of (and incl.)
+            # this one — what's left is the link's share of the cycle
+            wire_s = max((now - t0) - depth * compute_s, 0.0)
+            with self._cv:
+                self._window.observe(wire_s, compute_s)
         if not rmeta.get("ok", False):
             fut.set_exception(
                 RemoteError(rmeta.get("error", "unknown remote error")))
@@ -564,6 +783,7 @@ class PipelinedHostRuntime(HostRuntime):
                 self._broken = exc
             pending = list(self._pending.values())
             self._pending.clear()
+            self._track.clear()
             self._receiving = False
             self._cv.notify_all()
         for fut in pending:
@@ -596,6 +816,31 @@ class PipelinedHostRuntime(HostRuntime):
     def in_flight(self) -> int:
         with self._cv:
             return len(self._pending)
+
+    @property
+    def window(self) -> int:
+        """The live in-flight window (adaptive; capped at max_in_flight)."""
+        with self._cv:
+            return self._window.window
+
+    def stats(self) -> dict:
+        """Snapshot of the data-plane counters (see module docstring)."""
+        with self._cv:
+            return {
+                "bytes_sent": self.bytes_sent,
+                "bytes_received": self.bytes_received,
+                "in_flight": len(self._pending),
+                "window": self._window.window,
+                "max_in_flight": self.max_in_flight,
+                "adaptive_window": self.adaptive_window,
+                "send_stalls": self._send_stalls,
+                "sends_resumed": self._sends_resumed,
+                "recv_retries": self._recv_retries,
+                "requests_completed": self._requests_completed,
+                "wire_ema_s": self._window.wire_ema,
+                "compute_ema_s": self._window.compute_ema,
+                "window_observations": self._window.observations,
+            }
 
     def close(self) -> None:
         self._closed = True

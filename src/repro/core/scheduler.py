@@ -6,11 +6,21 @@ The scheduler scores every healthy pool member with the analytic cost model
 destination.  ``hedged_call`` implements tail-latency mitigation: if the
 primary destination does not answer within a deadline, the request is
 duplicated to the runner-up and the first completion wins — AVEC's answer to
-slow/overloaded edge nodes."""
+slow/overloaded edge nodes.
+
+Data-plane feedback: bind a live host runtime to a pool member with
+:meth:`DeviceAwareScheduler.attach_runtime` (its ``stats()`` snapshot is
+pulled at scoring time), or push snapshots explicitly via
+:meth:`DeviceAwareScheduler.record_runtime_stats`.  A member whose link
+shows byte-level backpressure (send stalls per completed request, measured
+per snapshot interval and EMA-decayed so a recovered link is forgiven)
+gets its predicted latency penalized — the analytic link model can't see a
+saturated socket buffer, but the runtime counters can."""
 from __future__ import annotations
 
 import concurrent.futures as _fut
 import threading
+import time
 from typing import Callable, Optional
 
 from repro.core.costmodel import Workload, estimate_request_time
@@ -23,12 +33,82 @@ class NoDestinationError(RuntimeError):
 
 class DeviceAwareScheduler:
     def __init__(self, registry: AcceleratorRegistry,
-                 load_penalty: float = 1.0) -> None:
+                 load_penalty: float = 1.0,
+                 backpressure_penalty: float = 1.0,
+                 stall_decay_halflife_s: float = 30.0) -> None:
         self.registry = registry
         self.load_penalty = load_penalty
+        self.backpressure_penalty = backpressure_penalty
+        self.stall_decay_halflife_s = stall_decay_halflife_s
+        self._stats_lock = threading.Lock()
+        self._runtime_stats: dict[str, dict] = {}
+        self._stall_rate: dict[str, float] = {}
+        self._stall_seen: dict[str, float] = {}
+        self._runtimes: dict[str, object] = {}
+
+    # -- data-plane feedback -----------------------------------------------
+    def attach_runtime(self, name: str, runtime) -> None:
+        """Bind a live host runtime (anything with ``stats()``, i.e. a
+        ``PipelinedHostRuntime``) to pool member ``name``; its counters are
+        snapshotted automatically every time the member is scored."""
+        with self._stats_lock:
+            self._runtimes[name] = runtime
+
+    def record_runtime_stats(self, name: str, stats: dict) -> None:
+        """Ingest a ``PipelinedHostRuntime.stats()`` snapshot for pool
+        member ``name`` (chosen adaptive window, stall/backpressure
+        counters, byte totals).  The stall rate is computed over the DELTA
+        from the previous snapshot and EMA-smoothed, so a transient
+        backpressure burst decays once the link recovers instead of
+        penalizing the member for the rest of the process lifetime."""
+        with self._stats_lock:
+            prev = self._runtime_stats.get(name)
+            d_stalls = stats.get("send_stalls", 0)
+            d_done = stats.get("requests_completed", 0)
+            if prev is not None:
+                d_stalls -= prev.get("send_stalls", 0)
+                d_done -= prev.get("requests_completed", 0)
+                if d_stalls < 0 or d_done < 0:      # runtime was replaced
+                    d_stalls = stats.get("send_stalls", 0)
+                    d_done = stats.get("requests_completed", 0)
+            now = time.monotonic()
+            if d_stalls or d_done:
+                rate = min(float(d_stalls) / max(int(d_done), 1), 1.0)
+                old = self._stall_rate.get(name)
+                self._stall_rate[name] = (rate if old is None or prev is None
+                                          else 0.5 * old + 0.5 * rate)
+            elif prev is not None:
+                # idle interval: decay by ELAPSED TIME, not per call —
+                # rapid back-to-back scoring must not erase the penalty of
+                # a link that simply hasn't been retried yet
+                dt = now - self._stall_seen.get(name, now)
+                if dt > 0:
+                    self._stall_rate[name] = (
+                        self._stall_rate.get(name, 0.0)
+                        * 0.5 ** (dt / self.stall_decay_halflife_s))
+            self._stall_seen[name] = now
+            self._runtime_stats[name] = dict(stats)
+
+    def runtime_stats(self, name: str | None = None) -> dict:
+        """The recorded data-plane snapshots (all members, or one)."""
+        with self._stats_lock:
+            if name is not None:
+                return dict(self._runtime_stats.get(name, {}))
+            return {k: dict(v) for k, v in self._runtime_stats.items()}
+
+    def _backpressure_factor(self, name: str) -> float:
+        with self._stats_lock:
+            rt = self._runtimes.get(name)
+        if rt is not None and hasattr(rt, "stats"):
+            self.record_runtime_stats(name, rt.stats())
+        with self._stats_lock:
+            rate = self._stall_rate.get(name, 0.0)
+        return 1.0 + self.backpressure_penalty * rate
 
     def score(self, w: Workload, va: VirtualAccelerator) -> float:
-        return estimate_request_time(w, va.spec, va.inflight, self.load_penalty)
+        base = estimate_request_time(w, va.spec, va.inflight,
+                                     self.load_penalty)
+        return base * self._backpressure_factor(va.name)
 
     def candidates(self, w: Workload,
                    exclude: tuple[str, ...] = ()) -> list[VirtualAccelerator]:

@@ -257,6 +257,17 @@ def frame_request_id(data) -> int:
     return struct.unpack_from("<Q", head, 4)[0]
 
 
+def frame_preamble_ok(data) -> bool:
+    """True when the fixed preamble is readable (long enough and carrying
+    the right magic) — the bar an executor requires before echoing the
+    request id back on a per-request error.  A frame that fails this check
+    cannot be answered addressably at all: the connection must fail loudly
+    instead (see ``DestinationExecutor.handle``)."""
+    head = data.segments[0] if isinstance(data, Frame) else data
+    mv = memoryview(head)
+    return len(mv) >= PREAMBLE and bytes(mv[:4]) == MAGIC
+
+
 def _parse_head(head) -> tuple[dict, int, int]:
     magic, rid, hlen = struct.unpack_from(_PREAMBLE_FMT, head, 0)
     assert magic == MAGIC, "bad frame magic"

@@ -20,8 +20,10 @@ frame itself carries the AVEC preamble (see ``core.serialization``).
 from __future__ import annotations
 
 import queue
+import select
 import socket
 import struct
+import sys
 import threading
 import time
 from typing import Callable, Optional
@@ -33,9 +35,22 @@ class ChannelClosed(Exception):
     pass
 
 
+class ProtocolError(ChannelClosed):
+    """Unframeable / garbled bytes on a connection.  Past this point the
+    stream cannot be re-synchronized, so transports must tear the connection
+    down (loudly) rather than answer with a response nobody can address."""
+
+
 class Channel:
     """Bidirectional message channel (bytes or vectored Frames in, bytes-like
     out)."""
+
+    @property
+    def broken(self) -> bool:
+        """True once the channel's stream is unframeable (e.g. a mid-frame
+        timeout) and every in-flight exchange on it is lost.  Wrapper
+        channels must delegate to their inner channel."""
+        return False
 
     def send(self, data) -> None:
         raise NotImplementedError
@@ -113,22 +128,70 @@ def _segments(data) -> list:
 
 
 def _sendmsg_all(sock: socket.socket, segments: list) -> None:
-    """Scatter-gather send of every segment, handling partial sends."""
+    """Scatter-gather send of every segment, handling partial sends.  An
+    index cursor tracks progress (a ``pending.pop(0)`` scheme is O(n^2) on
+    large segment lists — big parameter trees have thousands of leaves)."""
     pending = [s for s in segments if len(s)]
-    while pending:
+    i = 0
+    while i < len(pending):
         try:
-            n = sock.sendmsg(pending[:_IOV_MAX])
+            n = sock.sendmsg(pending[i:i + _IOV_MAX])
         except AttributeError:  # pragma: no cover - platforms without sendmsg
-            for s in pending:
+            for s in pending[i:]:
                 sock.sendall(s)
             return
         while n:
-            if n >= len(pending[0]):
-                n -= len(pending[0])
-                pending.pop(0)
+            if n >= len(pending[i]):
+                n -= len(pending[i])
+                pending[i] = None       # release the buffer reference
+                i += 1
             else:
-                pending[0] = pending[0][n:]
+                pending[i] = pending[i][n:]
                 n = 0
+
+
+class _SendState:
+    """Resumable frame-send state machine.
+
+    Tracks (segment index, intra-segment offset) progress of one wire frame
+    — length prefix plus payload segments — across ``EAGAIN`` on a
+    non-blocking send path, so a stalled send can be parked, receives pumped,
+    and the SAME frame resumed exactly where the kernel stopped accepting
+    bytes.  Framing integrity is the state machine's invariant: bytes are
+    only ever consumed from the front, never re-sent or skipped.
+    """
+
+    __slots__ = ("segments", "index", "total", "sent", "stalls")
+
+    def __init__(self, data) -> None:
+        segs = _segments(data)
+        total = sum(len(s) for s in segs)
+        self.segments: list = [memoryview(struct.pack("<Q", total)),
+                               *[s for s in segs if len(s)]]
+        self.total = total + 8
+        self.sent = 0
+        self.index = 0
+        self.stalls = 0             # would-block events while sending
+
+    @property
+    def done(self) -> bool:
+        return self.index >= len(self.segments)
+
+    def advance(self, n: int) -> None:
+        """Consume ``n`` accepted bytes from the front of the frame."""
+        self.sent += n
+        while n:
+            seg = self.segments[self.index]
+            if n >= len(seg):
+                n -= len(seg)
+                self.segments[self.index] = None    # release the buffer ref
+                self.index += 1
+            else:
+                self.segments[self.index] = seg[n:]
+                n = 0
+
+
+_MSG_DONTWAIT = getattr(socket, "MSG_DONTWAIT", 0)
 
 
 def _send_frame(sock: socket.socket, data) -> None:
@@ -188,11 +251,21 @@ def _recv_frame(sock: socket.socket) -> bytearray:
 
 
 class TCPChannel(Channel):
+    # resumable sends need per-call non-blocking sendmsg; flipping the whole
+    # socket non-blocking instead would race a concurrent mid-frame recv
+    # (which would then spuriously fail the channel), so without the flag
+    # callers must use the plain blocking path
+    supports_resumable_send = bool(_MSG_DONTWAIT)
+
     def __init__(self, sock: socket.socket) -> None:
         self._sock = sock
         self._lock = threading.Lock()
         self._rlock = threading.Lock()
         self._broken = False
+
+    @property
+    def broken(self) -> bool:
+        return self._broken
 
     @staticmethod
     def connect(host: str, port: int, timeout: float = 10.0) -> "TCPChannel":
@@ -215,6 +288,73 @@ class TCPChannel(Channel):
                 self._fail()
                 raise TimeoutError(
                     "tcp send timed out mid-frame; channel failed")
+
+    # -- resumable non-blocking send ---------------------------------------
+    def begin_send(self, data) -> _SendState:
+        """Start a resumable frame send; drive it with
+        :meth:`try_send_resume`.  Callers must serialize begin/resume pairs
+        per channel themselves (frames are atomic wire units) and must not
+        interleave :meth:`send` with an unfinished state."""
+        if self._broken:
+            raise ChannelClosed("channel failed on a previous partial frame")
+        return _SendState(data)
+
+    def try_send_resume(self, state: _SendState) -> bool:
+        """Push as many bytes of ``state``'s frame as the kernel will take
+        WITHOUT blocking (per-call ``MSG_DONTWAIT``; the socket itself stays
+        blocking so the receive path is untouched).  Returns True once the
+        frame is fully written, False when the send buffer is full — drain
+        receives / wait for writability, then call again.  Partial progress
+        is kept in ``state``; framing can never tear because bytes are only
+        consumed from the front."""
+        if self._broken:
+            raise ChannelClosed("channel failed on a previous partial frame")
+        with self._lock:
+            if not _MSG_DONTWAIT:  # pragma: no cover - no per-call flag
+                # cannot send non-blockingly without flipping the SHARED
+                # socket's mode under a concurrent mid-frame recv; degrade
+                # to blocking (callers gate on supports_resumable_send)
+                _sendmsg_all(self._sock, list(state.segments[state.index:]))
+                state.index = len(state.segments)
+                state.sent = state.total
+                return True
+            while not state.done:
+                batch = state.segments[state.index:state.index + _IOV_MAX]
+                try:
+                    n = self._sock.sendmsg(batch, [], _MSG_DONTWAIT)
+                except (BlockingIOError, InterruptedError):
+                    state.stalls += 1
+                    return False
+                if n == 0:
+                    state.stalls += 1
+                    return False
+                state.advance(n)
+        return True
+
+    def fail_partial_send(self, state: _SendState) -> None:
+        """Abandoning a partially-written frame tears the wire framing (the
+        peer would parse the next frame's length prefix out of payload
+        bytes); the channel must be failed, exactly as the blocking ``send``
+        path does on a mid-frame timeout.  No-op if the frame never started
+        or already finished."""
+        if state.sent and not state.done:
+            self._fail()
+
+    def wait_io(self, *, read: bool = True, write: bool = False,
+                timeout: float = 0.05) -> tuple[bool, bool]:
+        """``select()`` on the socket: returns (readable, writable).  The
+        stalled-send pump uses this to sleep until EITHER the kernel will
+        take more frame bytes or a response arrived to drain — no busy
+        spin, no blocking send."""
+        if self._broken:
+            raise ChannelClosed("channel failed on a previous partial frame")
+        try:
+            r, w, _ = select.select([self._sock] if read else [],
+                                    [self._sock] if write else [],
+                                    [], max(timeout, 0.0))
+        except (OSError, ValueError):
+            raise ChannelClosed("socket closed while waiting for io")
+        return bool(r), bool(w)
 
     def recv(self, timeout: Optional[float] = None):
         """Receive one frame into a fresh preallocated buffer.
@@ -335,6 +475,11 @@ class TCPServer:
             while not self._stop.is_set():
                 req = _recv_frame(conn)
                 _send_frame(conn, self._handler(req))
+        except ProtocolError as e:
+            # garbled stream: no addressable response is possible — drop the
+            # connection and say so, instead of stranding the peer's futures
+            print(f"[TCPServer] closing connection on protocol error: {e}",
+                  file=sys.stderr, flush=True)
         except (ChannelClosed, OSError):
             pass
         finally:
@@ -385,23 +530,35 @@ class SimulatedChannel(Channel):
     """Loopback channel that charges a calibrated link model on a virtual
     clock: t = latency + bytes/bandwidth + bytes/serialize_rate (destination
     CPU cost, the term that makes the paper's *edge* link slower than its
-    *cloud* link at equal data size — Fig. 9)."""
+    *cloud* link at equal data size — Fig. 9).
+
+    With ``realtime=True`` the charged seconds are also actually slept, so
+    the channel emulates a narrow real link in wall-clock time — the harness
+    the adaptive in-flight window is exercised against (a link-bound
+    simulated channel must grow the window; a compute-bound one must not)."""
 
     def __init__(self, inner: Channel, clock: VirtualClock, *,
                  bandwidth: float, latency: float, serialize_rate: float,
-                 name: str = "link") -> None:
+                 name: str = "link", realtime: bool = False) -> None:
         self._inner = inner
         self.clock = clock
         self.bandwidth = bandwidth
         self.latency = latency
         self.serialize_rate = serialize_rate
         self.name = name
+        self.realtime = realtime
+
+    @property
+    def broken(self) -> bool:
+        return getattr(self._inner, "broken", False)
 
     def _charge(self, nbytes: int, direction: str) -> None:
         t = self.latency + nbytes / self.bandwidth
         if self.serialize_rate > 0:
             t += nbytes / self.serialize_rate
         self.clock.charge(t, f"{self.name}.{direction}")
+        if self.realtime and t > 0:
+            time.sleep(t)
 
     def send(self, data) -> None:
         self._charge(len(data), "send")

@@ -1,8 +1,13 @@
-"""Serving entrypoint: stand up a destination executor (TCP) or run the
-continuous-batching engine locally.
+"""Serving entrypoint: stand up a destination executor (TCP), drive it as a
+pipelined offload host, or run the continuous-batching engine locally.
 
   # destination node (the "edge/cloud GPU server"):
   PYTHONPATH=src python -m repro.launch.serve --role destination --port 9000
+
+  # host node streaming requests at that destination (prints the adaptive
+  # in-flight window + backpressure counters from the runtime stats):
+  PYTHONPATH=src python -m repro.launch.serve --role host \
+      --connect 127.0.0.1:9000 --requests 32
 
   # local engine demo:
   PYTHONPATH=src python -m repro.launch.serve --role local --requests 8
@@ -16,20 +21,26 @@ import jax
 import numpy as np
 
 from repro.configs import get_arch, list_archs, reduced
-from repro.core.executor import DestinationExecutor
+from repro.core.executor import DestinationExecutor, PipelinedHostRuntime
 from repro.core.library import make_model_library
-from repro.core.transport import TCPServer
+from repro.core.transport import TCPChannel, TCPServer
 from repro.models import model as M
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import (PipelinedOffloadFrontend, Request,
+                                  ServingEngine)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b", choices=list_archs())
-    ap.add_argument("--role", default="local", choices=["local", "destination"])
+    ap.add_argument("--role", default="local",
+                    choices=["local", "destination", "host"])
     ap.add_argument("--port", type=int, default=0)
+    ap.add_argument("--connect", default="127.0.0.1:9000",
+                    help="host role: destination address host:port")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--max-in-flight", type=int, default=8,
+                    help="host role: in-flight window cap (adaptive below)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -48,6 +59,35 @@ def main() -> None:
                 time.sleep(1)
         except KeyboardInterrupt:
             server.stop()
+        return
+
+    if args.role == "host":
+        host, _, port = args.connect.rpartition(":")
+        rt = PipelinedHostRuntime(TCPChannel.connect(host, int(port)),
+                                  max_in_flight=args.max_in_flight)
+        fp = f"{args.arch}-seed{args.seed}"
+        rt.put_model(fp, "lm", params)
+        fe = PipelinedOffloadFrontend(rt, fp, "score")
+        rng = np.random.default_rng(args.seed)
+        prompts = {f"r{i}": {"tokens": rng.integers(
+            0, cfg.vocab_size, (1, 16)).astype(np.int32),
+            "targets": rng.integers(0, cfg.vocab_size, (1, 16))
+            .astype(np.int32)} for i in range(args.requests)}
+        t0 = time.perf_counter()
+        fe.map(prompts)
+        dt = time.perf_counter() - t0
+        s = fe.stats()
+        print(f"{args.requests} offloaded score() calls in {dt:.2f}s "
+              f"({args.requests / dt:.1f} req/s)")
+        print(f"adaptive window {s['window']}/{s['max_in_flight']} "
+              f"(wire~{s['wire_ema_s'] * 1e3:.1f}ms "
+              f"compute~{s['compute_ema_s'] * 1e3:.1f}ms), "
+              f"send stalls {s['send_stalls']}, "
+              f"resumed sends {s['sends_resumed']}, "
+              f"recv retries {s['recv_retries']}, "
+              f"{s['bytes_sent'] / 1e6:.1f}MB out / "
+              f"{s['bytes_received'] / 1e6:.1f}MB in")
+        rt.close()
         return
 
     eng = ServingEngine(cfg, params, max_batch=args.max_batch,

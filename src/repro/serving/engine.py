@@ -202,6 +202,14 @@ class PipelinedOffloadFrontend:
         futs = {rid: self.submit(args) for rid, args in requests.items()}
         return {rid: fut.result() for rid, fut in futs.items()}
 
+    def stats(self) -> dict:
+        """Frontend + data-plane counters: the runtime's adaptive window,
+        backpressure stalls, and byte totals (see
+        ``repro.core.executor`` module docstring), plus ``submitted``."""
+        rt_stats = (self.runtime.stats()
+                    if hasattr(self.runtime, "stats") else {})
+        return {"submitted": self.submitted, **rt_stats}
+
 
 # ---------------------------------------------------------------------------
 # Reference: sequential (unbatched) greedy generation, for equivalence tests

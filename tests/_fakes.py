@@ -1,0 +1,31 @@
+"""Shared test fakes for the data-plane suites."""
+import numpy as np
+
+
+class TrickleSocket:
+    """Fake socket whose sendmsg accepts only a pseudo-random few bytes per
+    call and sporadically reports a full buffer — the hostile narrow link
+    the resumable send state machine must keep framing integrity on.  Used
+    by both the deterministic (test_dataplane) and hypothesis-driven
+    (test_properties) framing-integrity suites."""
+
+    def __init__(self, seed: int, block_p: float = 0.3,
+                 max_accept: int = 4096) -> None:
+        self.rng = np.random.default_rng(seed)
+        self.block_p = block_p
+        self.max_accept = max_accept
+        self.buf = bytearray()
+
+    def sendmsg(self, bufs, ancdata=(), flags=0):
+        if self.rng.random() < self.block_p:
+            raise BlockingIOError
+        total = sum(len(b) for b in bufs)
+        n = min(int(self.rng.integers(1, self.max_accept + 1)), total)
+        take = n
+        for seg in bufs:
+            if not take:
+                break
+            k = min(len(seg), take)
+            self.buf += bytes(memoryview(seg)[:k])
+            take -= k
+        return n

@@ -1,5 +1,6 @@
 """Zero-copy, pipelined data plane: vectored wire format, multi-in-flight
-RPC, destination call coalescing, and the transport hardening fixes."""
+RPC, destination call coalescing, the transport hardening fixes, and the
+deadlock-free resumable send path with its adaptive in-flight window."""
 import socket
 import struct
 import threading
@@ -9,11 +10,15 @@ import numpy as np
 import pytest
 
 from repro.core.executor import (DestinationExecutor, HostRuntime,
-                                 PipelinedHostRuntime, RemoteError)
-from repro.core.serialization import (Frame, frame_request_id, pack_message,
+                                 PipelinedHostRuntime, RemoteError,
+                                 _WindowController)
+from repro.core.serialization import (Frame, frame_preamble_ok,
+                                      frame_request_id, pack_message,
                                       unpack_message)
 from repro.core.transport import (ChannelClosed, DirectChannel,
-                                  LoopbackChannel, TCPChannel, TCPServer)
+                                  LoopbackChannel, ProtocolError,
+                                  SimulatedChannel, TCPChannel, TCPServer,
+                                  VirtualClock, _sendmsg_all)
 
 
 def _tiny_library():
@@ -523,6 +528,305 @@ def test_pipelined_frontend_with_coalescing_destination():
         np.testing.assert_array_equal(outs[f"r{i}"]["y"],
                                       np.full((1, 3), 2.0 * i))
     assert fe.submitted == 8
+    # the frontend surfaces the runtime's data-plane stats
+    s = fe.stats()
+    assert s["submitted"] == 8
+    assert 2 <= s["window"] <= s["max_in_flight"] == 8
+    assert s["requests_completed"] >= 8
     rt.close()
     server.stop()
     ex.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# resumable non-blocking sends (the PR-1 deadlock fix)
+# ---------------------------------------------------------------------------
+
+from _fakes import TrickleSocket  # noqa: E402 — shared with test_properties
+
+
+def _rand_tree(rng):
+    return {
+        "a": rng.standard_normal((int(rng.integers(1, 40)),
+                                  int(rng.integers(1, 40)))).astype(np.float32),
+        "b": [rng.integers(-100, 100, int(rng.integers(0, 30)))
+              .astype(np.int32) for _ in range(int(rng.integers(1, 4)))],
+        "c": (np.float32(rng.standard_normal()),
+              np.zeros((0,), np.float64)),          # 0-length segment
+    }
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_resumable_send_framing_integrity(seed):
+    """Property: under forced partial writes and would-block stalls, the
+    resumed frame arrives byte-identical to the blocking wire form."""
+    rng = np.random.default_rng(seed)
+    tree = _rand_tree(rng)
+    frame = pack_message({"op": "prop", "seed": seed}, tree,
+                         request_id=seed + 1)
+    sock = TrickleSocket(seed, block_p=0.3,
+                          max_accept=int(rng.integers(1, 2000)))
+    ch = TCPChannel(sock)
+    state = ch.begin_send(frame)
+    attempts = 0
+    while not ch.try_send_resume(state):
+        attempts += 1
+        assert attempts < 100_000, "resumable send made no progress"
+    wire = bytes(sock.buf)
+    (n,) = struct.unpack("<Q", wire[:8])
+    assert n == len(frame) and len(wire) == n + 8
+    assert state.sent == len(wire) and state.done
+    assert wire[8:] == bytes(frame)
+    meta, out = unpack_message(wire[8:])
+    assert meta == {"op": "prop", "seed": seed}
+    assert frame_request_id(wire[8:]) == seed + 1
+    np.testing.assert_array_equal(out["a"], tree["a"])
+    for got, want in zip(out["b"], tree["b"]):
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_sendmsg_all_index_cursor_partial_writes(seed):
+    """The blocking scatter-gather path (now an index cursor, not
+    pop(0)) must survive arbitrary partial accepts over many segments —
+    including more segments than one sendmsg batch takes."""
+    rng = np.random.default_rng(seed)
+    segs = [memoryview(bytes([i % 256]) * int(rng.integers(0, 64)))
+            for i in range(1500)]
+    sock = TrickleSocket(seed, block_p=0.0, max_accept=777)
+    _sendmsg_all(sock, list(segs))
+    assert bytes(sock.buf) == b"".join(bytes(s) for s in segs)
+
+
+def _shrunken_socketpair(bufsize: int = 8192):
+    a, b = socket.socketpair()
+    for s in (a, b):
+        s.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, bufsize)
+        s.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, bufsize)
+    return a, b
+
+
+def test_small_socket_buffer_deadlock_regression():
+    """The PR-1 deadlock repro: window x frame bytes >> socket buffering
+    against a serial (recv -> handle -> send) destination.  A send path that
+    blocks without pumping receives stalls both ends on mutually-full
+    buffers (this test then fails by timeout); the resumable path must park
+    the stalled send, drain responses, and complete every request.  The rig
+    itself is ``benchmarks.micro.backpressure_probe`` — the same harness CI's
+    smoke bench records into BENCH_dataplane.json."""
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.micro import backpressure_probe
+
+    # 512KB frames, window 4 => ~2MB in flight against ~8KB socket buffers
+    r = backpressure_probe(frames=6, frame_floats=128 * 1024, bufsize=8192,
+                           max_in_flight=4, timeout=30)
+    assert r["verified"] and r["requests_completed"] == 6
+    assert r["wall_s"] < 25, "came too close to the deadlock path"
+    # the kernel buffer MUST have filled mid-frame for this repro to be
+    # meaningful — i.e. a blocking sendmsg would have parked with responses
+    # undrained (the PR-1 deadlock)
+    assert r["send_stalls"] > 0 and r["sends_resumed"] > 0
+
+
+def test_abandoned_partial_send_fails_channel():
+    """Timing out with a frame half-written must fail the channel — a later
+    send would otherwise splice a fresh length prefix into the torn frame
+    and the peer would misframe everything after it."""
+    a, b = _shrunken_socketpair()        # destination never reads
+    rt = PipelinedHostRuntime(TCPChannel(a), max_in_flight=2, timeout=0.5)
+    big = {"x": np.zeros(256 * 1024, np.float32)}   # 1MB >> buffering
+    with pytest.raises(TimeoutError):
+        rt.submit({"op": "noop"}, big)
+    assert rt.stats()["send_stalls"] > 0
+    with pytest.raises(ChannelClosed):
+        rt.submit({"op": "noop"}, {"x": np.zeros(4, np.float32)})
+    rt.close()
+    b.close()
+
+
+# ---------------------------------------------------------------------------
+# malformed-frame handling (request id preserved / loud connection failure)
+# ---------------------------------------------------------------------------
+
+def test_malformed_frame_preserves_request_id():
+    """Garbage past a readable preamble must error back on the REAL request
+    id — a rid-0 response is dropped by a pipelined host and the caller's
+    future would hang until timeout."""
+    ex = DestinationExecutor({"tiny": _tiny_library()})
+    good = bytearray(bytes(pack_message({"op": "ping"}, None, request_id=42)))
+    good[16:] = b"\xff" * (len(good) - 16)      # corrupt the msgpack header
+    resp = ex.handle(bytes(good))
+    assert frame_request_id(resp) == 42
+    rmeta, _ = unpack_message(resp)
+    assert rmeta["ok"] is False
+
+
+def test_unreadable_preamble_raises_protocol_error():
+    ex = DestinationExecutor({"tiny": _tiny_library()})
+    assert not frame_preamble_ok(b"shrt")
+    assert not frame_preamble_ok(b"NOPE" + b"\x00" * 32)
+    with pytest.raises(ProtocolError):
+        ex.handle(b"shrt")
+    with pytest.raises(ProtocolError):
+        ex.handle(b"NOPE" + b"\x00" * 32)
+
+
+def test_unreadable_preamble_drops_tcp_connection():
+    """Over TCP the server must tear the connection down (no rid-0 reply to
+    strand the peer's future)."""
+    ex = DestinationExecutor({"tiny": _tiny_library()})
+    server = TCPServer(ex.handle).start()
+    ch = TCPChannel.connect("127.0.0.1", server.port)
+    ch.send(b"XXXX" + b"\x00" * 28)             # bad magic, framed length
+    with pytest.raises(ChannelClosed):
+        ch.recv(timeout=5)
+    server.stop()
+
+
+# ---------------------------------------------------------------------------
+# pump retry on clean channel timeouts
+# ---------------------------------------------------------------------------
+
+def test_pump_retries_past_clean_channel_timeout():
+    """A clean channel-level recv timeout (stream intact) must not expire a
+    caller whose own deadline has not passed — the pump retries."""
+    host_ch, dest_ch = LoopbackChannel.pair()
+
+    def late_server():
+        raw = dest_ch.recv(timeout=10)
+        time.sleep(0.6)                 # several runtime timeouts long
+        dest_ch.send(pack_message({"ok": True}, None,
+                                  request_id=frame_request_id(raw)))
+
+    t = threading.Thread(target=late_server, daemon=True)
+    t.start()
+    rt = PipelinedHostRuntime(host_ch, max_in_flight=2, timeout=0.15)
+    fut = rt.submit({"op": "noop"})
+    meta, _ = rt.wait(fut, timeout=10)  # pre-fix: TimeoutError at ~0.15s
+    assert meta["ok"]
+    assert rt.stats()["recv_retries"] >= 1
+    t.join(timeout=5)
+    rt.close()
+
+
+# ---------------------------------------------------------------------------
+# adaptive in-flight window
+# ---------------------------------------------------------------------------
+
+def test_window_controller_adapts_both_ways():
+    wc = _WindowController(8)
+    assert wc.window == 8           # fresh: no throttling before evidence
+    for _ in range(10):
+        wc.observe(wire_s=0.0005, compute_s=0.05)
+    assert wc.window == 2           # compute-bound: double buffering
+    for _ in range(30):
+        wc.observe(wire_s=0.1, compute_s=0.001)
+    assert wc.window == 8           # link-bound: grows back to the cap
+    wc1 = _WindowController(1)
+    for _ in range(5):
+        wc1.observe(0.1, 0.001)
+    assert wc1.window == 1          # cap below the usual floor is respected
+
+
+def test_adaptive_window_settles_compute_bound():
+    """Real TCP destination with 20ms compute and a fast loopback wire: the
+    window must settle to ~2 (double buffering), visible in stats."""
+    ex, server, rt = _tiny_runtime(PipelinedHostRuntime)
+    futs = [rt.run_async("fp-tiny", "slow", {"x": np.zeros((2, 2), np.float32)})
+            for _ in range(12)]
+    [f.result(timeout=30) for f in futs]
+    s = rt.stats()
+    assert s["window_observations"] >= 12
+    assert 2 <= s["window"] <= 3
+    assert s["compute_ema_s"] > s["wire_ema_s"]
+    rt.close()
+    server.stop()
+
+
+def test_adaptive_window_grows_link_bound():
+    """Simulated narrow link in realtime: wire dominates compute, so the
+    window must grow from the compute-bound floor toward the cap."""
+    host_inner, dest_ch = LoopbackChannel.pair()
+    sim = SimulatedChannel(host_inner, VirtualClock(), bandwidth=2e6,
+                           latency=0.002, serialize_rate=0.0, realtime=True)
+    stop = threading.Event()
+
+    def destination():
+        try:
+            while not stop.is_set():
+                raw = dest_ch.recv(timeout=10)
+                meta, tree = unpack_message(raw)
+                compute = float(meta.get("compute", 0.0))
+                time.sleep(compute)
+                dest_ch.send(pack_message(
+                    {"ok": True, "compute_s": max(compute, 5e-4)},
+                    {"y": np.asarray(tree["x"])},
+                    request_id=frame_request_id(raw)))
+        except (ChannelClosed, TimeoutError):
+            pass
+
+    t = threading.Thread(target=destination, daemon=True)
+    t.start()
+    rt = PipelinedHostRuntime(sim, max_in_flight=6, timeout=30)
+    # phase 1 — compute-bound (tiny payload, 30ms compute): settles at 2
+    small = np.zeros(16, np.float32)
+    futs = [rt.submit({"op": "noop", "compute": 0.03}, {"x": small})
+            for _ in range(8)]
+    [rt.wait(f, timeout=30) for f in futs]
+    assert rt.window <= 3
+    # phase 2 — link-bound (16KB payloads over a 2MB/s link, ~0 compute):
+    # grows toward the configured cap
+    big = np.zeros(4096, np.float32)
+    futs = [rt.submit({"op": "noop", "compute": 0.0}, {"x": big})
+            for _ in range(16)]
+    [rt.wait(f, timeout=30) for f in futs]
+    s = rt.stats()
+    assert s["window"] == 6, s
+    assert s["wire_ema_s"] > s["compute_ema_s"]
+    stop.set()
+    rt.close()
+    t.join(timeout=5)
+
+
+def test_scheduler_ingests_runtime_stats():
+    """Backpressure counters exported into DeviceAwareScheduler demote a
+    stalling destination between otherwise-identical pool members."""
+    from repro.core.costmodel import Workload
+    from repro.core.scheduler import DeviceAwareScheduler
+    from repro.core.virtualization import AcceleratorRegistry, AcceleratorSpec
+
+    def spec(name):
+        return AcceleratorSpec(name=name, tier="edge", peak_flops=1e12,
+                               efficiency=0.3, mem_bytes=8e9,
+                               link_bandwidth=60e6, link_latency=2e-3,
+                               serialize_rate=100e6)
+
+    reg = AcceleratorRegistry()
+    reg.register(spec("stalling"))
+    reg.register(spec("healthy"))
+    sched = DeviceAwareScheduler(reg)
+    w = Workload("w", flops=1e9, bytes_out=1e6, bytes_back=1e5)
+    base = {va.name for va in sched.candidates(w)}
+    assert base == {"stalling", "healthy"}
+    sched.record_runtime_stats("stalling", {
+        "send_stalls": 40, "requests_completed": 10, "window": 2})
+    sched.record_runtime_stats("healthy", {
+        "send_stalls": 0, "requests_completed": 10, "window": 2})
+    assert sched.pick(w).name == "healthy"
+    assert sched.runtime_stats("stalling")["send_stalls"] == 40
+    assert "healthy" in sched.runtime_stats()
+    # a recovered link is forgiven: stall-free intervals decay the penalty
+    for done in (20, 30, 40, 50, 60):
+        sched.record_runtime_stats("stalling", {
+            "send_stalls": 40, "requests_completed": done, "window": 2})
+    assert sched._backpressure_factor("stalling") < 1.1
+    # attach_runtime pulls live stats at scoring time (the production path)
+    class _FakeRuntime:
+        def stats(self):
+            return {"send_stalls": 10, "requests_completed": 10, "window": 2}
+    sched2 = DeviceAwareScheduler(reg)
+    sched2.attach_runtime("healthy", _FakeRuntime())
+    assert sched2._backpressure_factor("healthy") > 1.5
+    assert sched2.runtime_stats("healthy")["send_stalls"] == 10
