@@ -1,8 +1,9 @@
 """Fault tolerance demo (paper future-work ii, implemented): a decode stream
-is running against destination A; A dies mid-stream; the heartbeat monitor
-detects it, the session fails over to destination B restoring the shadowed
-serving state, and the stream continues — byte-identical to an uninterrupted
-run.
+is running against destination A; A dies mid-stream; the NEXT call through
+the ``repro.avec`` session detects the death (failed call + failed ping
+probe), fails over to destination B restoring the host-side shadow state,
+and retries — the stream continues byte-identical to an uninterrupted run,
+and the application never handles the re-route.
 
 Run:  PYTHONPATH=src python examples/migration_demo.py
 """
@@ -12,17 +13,13 @@ import time
 import jax
 import numpy as np
 
+from repro import avec
+from repro.core import DestinationExecutor
 from repro.configs import get_arch, reduced
-from repro.core import (AcceleratorRegistry, AvecSession, DestinationExecutor,
-                        DeviceAwareScheduler, HeartbeatMonitor, HostRuntime,
-                        MigrationManager, SessionShadow, Workload)
 from repro.core.library import make_model_library
-from repro.core.transport import DirectChannel
 from repro.core.virtualization import JETSON_TX2
 from repro.models import model as M
 from repro.serving.engine import generate_sequential
-
-
 
 
 def main() -> None:
@@ -32,46 +29,38 @@ def main() -> None:
     executors = {n: DestinationExecutor({"lm": lib}, name=n)
                  for n in ("edge-a", "edge-b")}
 
-    registry = AcceleratorRegistry()
-    for n in executors:
-        registry.register(dataclasses.replace(JETSON_TX2, name=n))
-    sched = DeviceAwareScheduler(registry)
-    mgr = MigrationManager(registry, sched,
-                           lambda n: HostRuntime(DirectChannel(executors[n])))
+    # one front door: both in-process executors behind calibrated edge specs;
+    # shadow_every=1 snapshots the serving state after every call, so a
+    # failover can restore the newest KV cache
+    targets = [(dataclasses.replace(JETSON_TX2, name=n), ex)
+               for n, ex in executors.items()]
+    with avec.connect(targets, shadow_every=1) as client:
+        sess = client.session(cfg, params, "lm", destination="edge-a")
 
-    sess = AvecSession(cfg, params, mgr.runtime_factory("edge-a"), "lm")
-    shadow = SessionShadow(every_n_calls=1)
-    monitor = HeartbeatMonitor(sess.runtime, "edge-a", registry,
-                               interval_s=0.02, misses=2).start()
+        prompt = [5, 17, 3, 99, 42, 7]
+        want = generate_sequential(cfg, params, prompt, 10, max_len=32)
+        print(f"reference stream (uninterrupted): {want}")
 
-    prompt = [5, 17, 3, 99, 42, 7]
-    want = generate_sequential(cfg, params, prompt, 10, max_len=32)
-    print(f"reference stream (uninterrupted): {want}")
-
-    sess.call("prefill", {"tokens": np.asarray([prompt], np.int32)})
-    shadow.force_snapshot(sess, step=0)
-    got = [want[0]]
-    for step in range(1, 10):
-        if step == 4:
-            print(">>> killing edge-a mid-stream")
-            executors["edge-a"].fail = True
-            assert monitor.failed.wait(timeout=5.0)
-            w = Workload("lm", flops=1e9, bytes_out=1e4, bytes_back=1e4,
-                         model_bytes=1e6)
-            t0 = time.perf_counter()
-            new = mgr.failover(sess, w, failed_name="edge-a", shadow=shadow)
-            print(f">>> failover to {new} in {time.perf_counter() - t0:.3f}s "
-                  f"(state from shadow @step {shadow.snapshot_step}, "
-                  f"weights cached={mgr.migrations[-1]['cached']})")
-        out = sess.call("decode",
-                        {"tokens": np.asarray([[got[-1]]], np.int32)})
-        got.append(int(np.argmax(out["logits"][0, 0, :cfg.vocab_size])))
-        shadow.maybe_snapshot(sess, step)
-        shadow.force_snapshot(sess, step)
-    print(f"stream with mid-flight failover:  {got}")
-    assert got == want, "failover changed the stream!"
-    print("OK: failover preserved the decode stream exactly")
-    monitor.stop()
+        sess.call("prefill", {"tokens": np.asarray([prompt], np.int32)})
+        got = [want[0]]
+        for step in range(1, 10):
+            if step == 4:
+                print(">>> killing edge-a mid-stream")
+                executors["edge-a"].fail = True
+                t0 = time.perf_counter()
+            out = sess.call("decode",
+                            {"tokens": np.asarray([[got[-1]]], np.int32)})
+            if step == 4:
+                print(f">>> transparent failover to {sess.destination} in "
+                      f"{time.perf_counter() - t0:.3f}s (state from shadow, "
+                      f"weights cached="
+                      f"{client.migration.migrations[-1]['cached']})")
+            got.append(int(np.argmax(out["logits"][0, 0, :cfg.vocab_size])))
+        print(f"stream with mid-flight failover:  {got}")
+        assert got == want, "failover changed the stream!"
+        assert sess.destination == "edge-b"
+        print("OK: failover preserved the decode stream exactly — the "
+              "application only ever called sess.call()")
 
 
 if __name__ == "__main__":

@@ -2,10 +2,17 @@
 
 An "application" (the loop below) calls ``openpose.op_forward`` and
 ``openpose.render_pose`` exactly as it would locally.  With the AVEC
-interception library installed, the Caffe-analogue backbone kernels run at a
-destination executor while rendering stays on the host — the paper's 13
-host / 17 destination kernel split — and the simulated paper test-bed
-reports the Table-IV style speedups next to the real measured loopback run.
+interception library installed — through the ``repro.avec`` front door,
+with an explicit per-function ``ArgSpec`` instead of the old positional
+convention — the Caffe-analogue backbone kernels run at a destination
+executor while rendering stays on the host (the paper's 13 host / 17
+destination kernel split), and the simulated paper test-bed reports the
+Table-IV style speedups next to the real measured run.
+
+The facade's capability handshake auto-selects the pipelined runtime over
+the TCP channel, so the double-buffered phase below needs no bespoke
+wiring: the same session serves both the synchronous and the pipelined
+passes.
 
 Run:  PYTHONPATH=src python examples/openpose_pipeline.py
 """
@@ -20,10 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.models.openpose as openpose
+from repro import avec
 from repro.configs.avec_openpose import WORKLOAD
-from repro.core import AvecSession, HostRuntime, PipelinedHostRuntime
-from repro.core.interception import InterceptionLibrary
-from repro.core.transport import TCPChannel
 from repro.models.params import init_params
 
 from benchmarks.paper_tables import table4_speedup
@@ -59,78 +64,87 @@ def _run_demo(dest_port: int) -> None:
     params = init_params(openpose.op_param_specs(net), jax.random.PRNGKey(0),
                          jnp.float32)
     frames = openpose.make_frames(4, 368, 656)
-    rt = HostRuntime(TCPChannel.connect("127.0.0.1", dest_port))
-    sess = AvecSession(net, params, rt, "openpose")
-    sess.ensure_model()
 
-    # warm destination jit + host render once so the sync/pipelined timing
-    # below compares steady-state cycles, not compilation
-    warm = sess.call("forward", {"frames": np.asarray(frames[:1])})
-    openpose.render_pose(frames[:1], jnp.asarray(warm["beliefs"]))
+    # one front door: the handshake upgrades this TCP endpoint to the
+    # pipelined runtime automatically (shadowing off: stateless workload,
+    # and the sync-vs-pipelined timing below must compare pure cycles)
+    with avec.connect([f"tcp://127.0.0.1:{dest_port}"],
+                      max_in_flight=2, shadow_every=0) as client:
+        name = client.destinations[0]
+        caps = client.capabilities(name)
+        print(f"[handshake] protocol v{caps.protocol_version}, "
+              f"runtime {type(client.runtime(name)).__name__}, "
+              f"libraries {caps.libraries}")
+        sess = client.session(net, params, "openpose")
+        sess.ensure_model()
 
-    dispatcher = sess.make_dispatcher({"op_forward": "forward"})
-    with InterceptionLibrary(openpose, ["op_forward", "render_pose"],
-                             dispatcher):
-        t0 = time.perf_counter()
-        outs = application(net, params, frames)
-        wall = time.perf_counter() - t0
+        # warm destination jit + host render once so the sync/pipelined
+        # timing below compares steady-state cycles, not compilation
+        warm = sess.call("forward", {"frames": np.asarray(frames[:1])})
+        openpose.render_pose(frames[:1], jnp.asarray(warm["beliefs"]))
 
-    b = sess.profiler.breakdown()
-    per = sess.profiler.per_cycle()
-    print(f"processed {len(outs)} frames in {wall:.2f}s via AVEC offload")
-    print(f"  per-frame: GPU {per['gpu_s']:.3f}s | comm "
-          f"{per['communication_s']:.3f}s | host render {b['other_s'] / 4:.3f}s")
-    print(f"  wire/frame: {per['bytes_per_cycle'] / 1e6:.2f} MB "
-          f"(paper Eq.1 full-size frame: "
-          f"{WORKLOAD.data_transfer_bytes() / 1e6:.2f} MB)")
-    print(f"  model transfer (send-once): {b['model_transfer_s']:.3f}s")
+        # explicit ArgSpec: op_forward(net, params, DATA) carries its data
+        # tree at position 2; render_pose stays host-side (None)
+        with client.intercept(openpose, {
+                "op_forward": ("forward", avec.ArgSpec(position=2)),
+                "render_pose": None}, sess):
+            t0 = time.perf_counter()
+            outs = application(net, params, frames)
+            wall = time.perf_counter() - t0
 
-    # pipelined (double-buffered) offload: frame k+1 serializes + transmits
-    # while frame k computes at the destination — same model, same channel
-    # kind, but up to 2 frames in flight.  Timed against a warm synchronous
-    # loop over the same stream (render excluded from both) so the delta is
-    # purely the hidden communication.
-    stream = [np.asarray(openpose.make_frames(1, 368, 656)) for _ in range(8)]
-    prt = PipelinedHostRuntime(TCPChannel.connect("127.0.0.1", dest_port),
-                               max_in_flight=2)
-    psess = AvecSession(net, params, prt, "openpose")
-    psess.ensure_model()        # fingerprint hit: no re-transfer
+        b = sess.profiler.breakdown()
+        per = sess.profiler.per_cycle()
+        print(f"processed {len(outs)} frames in {wall:.2f}s via AVEC offload")
+        print(f"  per-frame: GPU {per['gpu_s']:.3f}s | comm "
+              f"{per['communication_s']:.3f}s | host render "
+              f"{b['other_s'] / 4:.3f}s")
+        print(f"  wire/frame: {per['bytes_per_cycle'] / 1e6:.2f} MB "
+              f"(paper Eq.1 full-size frame: "
+              f"{WORKLOAD.data_transfer_bytes() / 1e6:.2f} MB)")
+        print(f"  model transfer (send-once): {b['model_transfer_s']:.3f}s")
 
-    def sync_pass():
-        t0 = time.perf_counter()
-        outs = [sess.call("forward", {"frames": f}) for f in stream]
-        return time.perf_counter() - t0, outs
+        # pipelined (double-buffered) offload: frame k+1 serializes +
+        # transmits while frame k computes at the destination — the SAME
+        # session, since the handshake already picked the pipelined runtime.
+        # Timed against a warm synchronous loop over the same stream (render
+        # excluded from both) so the delta is purely the hidden
+        # communication.
+        stream = [np.asarray(openpose.make_frames(1, 368, 656))
+                  for _ in range(8)]
 
-    def pipe_pass():
-        t0 = time.perf_counter()
-        futs = [psess.call_async("forward", {"frames": f}) for f in stream]
-        outs = [f.result() for f in futs]
-        return time.perf_counter() - t0, outs
+        def sync_pass():
+            t0 = time.perf_counter()
+            outs = [sess.call("forward", {"frames": f}) for f in stream]
+            return time.perf_counter() - t0, outs
 
-    # two alternating passes per mode, best-of: destination compute jitter
-    # on a shared CPU otherwise swamps the communication overlap
-    (s1, sync_beliefs), (p1, beliefs) = sync_pass(), pipe_pass()
-    wall_sync = min(s1, sync_pass()[0])
-    wall_pipe = min(p1, pipe_pass()[0])
-    for s, p in zip(sync_beliefs, beliefs):     # identical results
-        assert np.allclose(np.asarray(s["beliefs"]), np.asarray(p["beliefs"]))
-    print(f"\npipelined offload (2 in flight): {len(beliefs)} frames "
-          f"{wall_pipe:.2f}s vs synchronous {wall_sync:.2f}s "
-          f"— {wall_sync / wall_pipe:.2f}x")
-    ps = prt.stats()
-    print(f"  adaptive window {ps['window']}/{ps['max_in_flight']} "
-          f"(wire~{ps['wire_ema_s'] * 1e3:.1f}ms "
-          f"compute~{ps['compute_ema_s'] * 1e3:.1f}ms); "
-          f"send stalls {ps['send_stalls']}, recv retries "
-          f"{ps['recv_retries']}")
-    prt.close()
+        def pipe_pass():
+            t0 = time.perf_counter()
+            futs = [sess.call_async("forward", {"frames": f}) for f in stream]
+            outs = [f.result() for f in futs]
+            return time.perf_counter() - t0, outs
+
+        # two alternating passes per mode, best-of: destination compute
+        # jitter on a shared CPU otherwise swamps the communication overlap
+        (s1, sync_beliefs), (p1, beliefs) = sync_pass(), pipe_pass()
+        wall_sync = min(s1, sync_pass()[0])
+        wall_pipe = min(p1, pipe_pass()[0])
+        for s, p in zip(sync_beliefs, beliefs):     # identical results
+            assert np.allclose(np.asarray(s["beliefs"]),
+                               np.asarray(p["beliefs"]))
+        print(f"\npipelined offload (2 in flight): {len(beliefs)} frames "
+              f"{wall_pipe:.2f}s vs synchronous {wall_sync:.2f}s "
+              f"— {wall_sync / wall_pipe:.2f}x")
+        ps = client.stats()[name]
+        print(f"  adaptive window {ps['window']}/{ps['max_in_flight']} "
+              f"(wire~{ps['wire_ema_s'] * 1e3:.1f}ms "
+              f"compute~{ps['compute_ema_s'] * 1e3:.1f}ms); "
+              f"send stalls {ps['send_stalls']}, recv retries "
+              f"{ps['recv_retries']}")
 
     print("\npaper test-bed simulation (calibrated cost model, Table IV):")
     for label, paper, model, err in table4_speedup():
         print(f"  {label:30s} paper={paper:5.2f}x  model={model:5.2f}x "
               f"({err * 100:4.1f}% off)")
-
-    rt.channel.close()
 
 
 if __name__ == "__main__":

@@ -1,5 +1,7 @@
 """Quickstart: build a model from the assigned-architecture registry, train a
-few steps on the synthetic pipeline, then serve a couple of requests.
+few steps on the synthetic pipeline, then serve a couple of requests THROUGH
+the AVEC front door — an in-process destination executor behind
+``avec.connect``, exactly the same call path a remote TCP destination uses.
 
 Run:  PYTHONPATH=src python examples/quickstart.py [--arch granite-3-2b]
 """
@@ -7,14 +9,14 @@ import argparse
 import sys
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro import avec
 from repro.configs import get_arch, list_archs, reduced
+from repro.core import DestinationExecutor
+from repro.core.library import make_model_library
 from repro.data.pipeline import make_pipeline
-from repro.models import model as M
 from repro.optim.optimizer import OptimizerConfig
-from repro.serving.engine import Request, ServingEngine
 from repro.train.trainer import Trainer
 
 
@@ -41,15 +43,29 @@ def main() -> None:
         print("serving demo targets decoder LMs; done.")
         return
     params = trainer._final["params"]
-    eng = ServingEngine(cfg, params, max_batch=2, max_len=64)
-    rng = np.random.default_rng(0)
-    for i in range(3):
-        eng.submit(Request(f"req{i}",
-                           rng.integers(0, cfg.vocab_size, 6).tolist(),
-                           max_new_tokens=8))
-    out = eng.run()
-    for rid, toks in out.items():
-        print(f"serve: {rid} -> {toks}")
+
+    # serve through the facade: connect -> session -> call.  Swapping the
+    # in-process executor for "tcp://host:port" is the ONLY change needed
+    # to serve from a real edge/cloud destination.
+    ex = DestinationExecutor({"lm": make_model_library(cfg, max_cache_len=64)},
+                             name="local-dest")
+    with avec.connect([ex]) as client:
+        sess = client.session(cfg, params, "lm")
+        rng = np.random.default_rng(0)
+        for i in range(3):
+            prompt = rng.integers(0, cfg.vocab_size, 6)[None].astype(np.int32)
+            out = sess.call("prefill", {"tokens": prompt})
+            toks = [int(np.argmax(out["logits"][0, -1, :cfg.vocab_size]))]
+            for _ in range(7):
+                out = sess.call("decode", {"tokens": np.asarray(
+                    [[toks[-1]]], np.int32)})
+                toks.append(int(np.argmax(out["logits"][0, 0,
+                                                        :cfg.vocab_size])))
+            print(f"serve: req{i} -> {toks}")
+        b = sess.profiler.breakdown()
+        print(f"profiled {b['cycles']} offload cycles via "
+              f"{sess.destination} (GPU {b['gpu_frac'] * 100:.0f}% / "
+              f"comm {b['communication_frac'] * 100:.0f}%)")
 
 
 if __name__ == "__main__":

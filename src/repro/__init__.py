@@ -1,0 +1,38 @@
+"""repro — AVEC accelerator virtualization for cloud-edge DL libraries.
+
+The supported host-side entry point is the :mod:`repro.avec` facade:
+
+    from repro import avec
+    client = avec.connect(["tcp://edge:9000"])
+    sess = client.session(cfg, params, "lm")
+
+Submodule re-exports are lazy (PEP 562) so ``import repro.models`` and
+friends don't drag the whole client stack in."""
+from __future__ import annotations
+
+import importlib
+
+__all__ = ["avec", "connect", "AvecClient", "ConnectPolicy", "ArgSpec"]
+
+_LAZY = {
+    "avec": ("repro.avec", None),
+    "connect": ("repro.avec", "connect"),
+    "AvecClient": ("repro.avec", "AvecClient"),
+    "ConnectPolicy": ("repro.avec", "ConnectPolicy"),
+    "ArgSpec": ("repro.avec", "ArgSpec"),
+}
+
+
+def __getattr__(name: str):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}")
+    mod = importlib.import_module(mod_name)
+    value = mod if attr is None else getattr(mod, attr)
+    globals()[name] = value         # cache: __getattr__ runs once per name
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

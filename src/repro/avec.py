@@ -1,0 +1,622 @@
+"""One front door for AVEC hosts: ``repro.avec.connect``.
+
+The paper's promise (§Q1 / motivation 4) is that an *unmodified*
+application gets transparent accelerator virtualization.  The host-side
+building blocks — registry, scheduler, transport, runtime tiers, sessions,
+interception — are composable on purpose, but composing them by hand costs
+~40 lines of bespoke wiring per caller and forces every application to pick
+its own runtime tier.  This module is the facade that owns that wiring:
+
+    client = avec.connect(["tcp://edge:9000", "tcp://cloud:9100"])
+    sess = client.session(cfg, params, "lm", tenant="acme")
+    out = sess.call("prefill", {"tokens": prompts})        # scheduler-routed
+    outs = sess.map("score", {rid: args, ...})             # sharded fan-out
+
+``connect`` accepts heterogeneous *targets* — ``"tcp://host:port"`` URLs,
+in-process :class:`~repro.core.executor.DestinationExecutor` instances, or
+``(AcceleratorSpec, target)`` pairs that attach a calibrated spec for the
+scheduler — and performs a **versioned capability handshake** with each:
+the executor's ping reply advertises its wire protocol version, decodable
+codecs, op set, pipelining and coalescing support (plus live coalescer
+stats).  The client then
+
+* rejects protocol-version mismatches loudly at connect time (never
+  misparse frames mid-stream),
+* auto-selects :class:`~repro.core.executor.PipelinedHostRuntime` when the
+  peer and channel support pipelining, and downgrades to the synchronous
+  :class:`~repro.core.executor.HostRuntime` otherwise,
+* downgrades the requested codec to one the peer can decode (``raw`` is
+  mandatory at every version, so negotiation always succeeds),
+* feeds the advertised ``coalesce_stats`` into
+  :class:`~repro.core.scheduler.DeviceAwareScheduler` so batch-amortizing
+  destinations advertise their cheaper dispatch cost, and binds live
+  runtime ``stats()`` for backpressure-aware scoring.
+
+Sessions are tenant-scoped (the destination's fingerprint cache keys by
+``tenant:fingerprint``, so two tenants sharing weights still get isolated
+mutable state), scheduler-routed, and failover-integrated: a destination
+that dies mid-stream is detected on the failing call, the session migrates
+to the next-best healthy destination restoring the host-side shadow state,
+and the call is retried — the application never sees the re-route.
+
+``client.intercept(module, fn_map, session)`` installs the interception
+library with explicit per-function :class:`~repro.core.interception.ArgSpec`
+extraction, replacing the deprecated positional ``args[2]`` convention.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.core.costmodel import Workload
+from repro.core.executor import (DestinationExecutor, HostRuntime,
+                                 PipelinedHostRuntime, RemoteError)
+from repro.core.interception import (ArgSpec, AvecSession,
+                                     InterceptionLibrary)
+from repro.core.migration import MigrationManager, SessionShadow
+from repro.core.scheduler import DeviceAwareScheduler, NoDestinationError
+from repro.core.serialization import PROTOCOL_VERSION, SUPPORTED_CODECS
+from repro.core.transport import (Channel, ChannelClosed, DirectChannel,
+                                  TCPChannel)
+from repro.core.virtualization import (AcceleratorRegistry, AcceleratorSpec,
+                                       CLOUD_RTX)
+from repro.serving.engine import (PipelinedOffloadFrontend,
+                                  ShardedOffloadFrontend)
+
+__all__ = [
+    "connect", "AvecClient", "ClientSession", "ConnectPolicy", "Endpoint",
+    "Capabilities", "HandshakeError", "ArgSpec", "PROTOCOL_VERSION",
+]
+
+
+class HandshakeError(ConnectionError):
+    """Endpoint and client cannot interoperate (protocol version mismatch,
+    unusable capability set).  Raised at connect time, loudly."""
+
+
+# Spec assumed for a bare "tcp://host:port" target: capability-class numbers
+# of the paper's cloud tier with memory effectively unconstrained, so the
+# scheduler never silently excludes an endpoint the caller didn't describe.
+DEFAULT_ENDPOINT_SPEC = replace(CLOUD_RTX, name="endpoint", mem_bytes=64e9)
+
+
+@dataclass(frozen=True)
+class Capabilities:
+    """What one endpoint advertised during the versioned handshake."""
+    name: str
+    protocol_version: int
+    codecs: tuple
+    ops: tuple
+    libraries: dict
+    pipelining: bool
+    coalesce: bool
+    coalesce_stats: dict
+    raw: dict = field(default_factory=dict, compare=False)
+
+    @staticmethod
+    def from_ping(reply: dict) -> "Capabilities":
+        return Capabilities(
+            name=reply.get("name", "?"),
+            protocol_version=int(reply.get("protocol_version", 1)),
+            codecs=tuple(reply.get("codecs", ("raw",))),
+            ops=tuple(reply.get("ops", ())),
+            libraries=dict(reply.get("libraries", {})),
+            pipelining=bool(reply.get("pipelining", False)),
+            coalesce=bool(reply.get("coalesce", False)),
+            coalesce_stats=dict(reply.get("coalesce_stats", {})),
+            raw=dict(reply))
+
+
+@dataclass(frozen=True)
+class ConnectPolicy:
+    """Host-side policy knobs for :func:`connect` (all optional — the facade
+    picks working defaults and the handshake downgrades what the peer can't
+    do)."""
+    codec: str = "raw"              # requested; downgraded to peer's set
+    prefer_pipelining: bool = True  # use PipelinedHostRuntime when possible
+    max_in_flight: int = 8          # pipelined window cap (adaptive below)
+    adaptive_window: bool = True
+    timeout: float = 120.0
+    copy_results: bool = False
+    failover: bool = True           # transparent re-route on node death
+    #: snapshot the destination's mutable session state back to the host
+    #: every N calls (0 = off).  The default (1) is correctness-first —
+    #: mid-stream failover can restore the NEWEST state — but costs one
+    #: snapshot RPC per call, which is real wire traffic for big KV
+    #: caches; stateless or throughput-bound callers should pass 0.
+    shadow_every: int = 1
+    max_shards: Optional[int] = None   # session.map fan-out width (None=all)
+    load_penalty: float = 1.0       # scheduler queueing weight
+
+
+@dataclass
+class Endpoint:
+    """A parsed connect target: spec for the scheduler + a way to dial it."""
+    name: str
+    spec: AcceleratorSpec
+    dial: Callable[[], Channel]
+
+    @staticmethod
+    def parse(target: Any, index: int) -> "Endpoint":
+        """Accepts ``"tcp://host:port"``, an in-process
+        :class:`DestinationExecutor`, an :class:`Endpoint`, a zero-arg
+        channel factory, or an ``(AcceleratorSpec, target)`` pair binding a
+        calibrated spec to any of the above."""
+        spec = None
+        if isinstance(target, tuple) and len(target) == 2 \
+                and isinstance(target[0], AcceleratorSpec):
+            spec, target = target
+        if isinstance(target, Endpoint):
+            return target if spec is None else replace(target, spec=spec,
+                                                       name=spec.name)
+        if isinstance(target, str):
+            if not target.startswith("tcp://"):
+                raise ValueError(
+                    f"unsupported endpoint URL {target!r} (expected "
+                    f"tcp://host:port)")
+            host, _, port = target[len("tcp://"):].rpartition(":")
+            if not host or not port.isdigit():
+                raise ValueError(f"malformed endpoint URL {target!r}")
+            spec = spec or replace(DEFAULT_ENDPOINT_SPEC,
+                                   name=f"ep{index}-{host}:{port}")
+            return Endpoint(spec.name, spec,
+                            lambda h=host, p=int(port): TCPChannel.connect(h, p))
+        if isinstance(target, DestinationExecutor):
+            spec = spec or replace(DEFAULT_ENDPOINT_SPEC,
+                                   name=target.name or f"ep{index}")
+            return Endpoint(spec.name, spec,
+                            lambda ex=target: DirectChannel(ex))
+        if callable(target):
+            if spec is None:
+                raise ValueError(
+                    "a bare channel factory target needs an AcceleratorSpec: "
+                    "pass (spec, factory)")
+            return Endpoint(spec.name, spec, target)
+        raise TypeError(f"cannot parse connect target {target!r}")
+
+
+def _channel_pipelinable(ch: Channel) -> bool:
+    """Pipelining needs independent send/recv on the channel; request-only
+    shims (DirectChannel) can't keep multiple frames in flight."""
+    return (type(ch).send is not Channel.send
+            and type(ch).recv is not Channel.recv)
+
+
+def negotiate_codec(requested: str, peer_codecs: tuple) -> str:
+    """The requested codec if the peer decodes it, else ``raw`` (mandatory
+    at every protocol version, so negotiation cannot fail)."""
+    return requested if requested in peer_codecs else "raw"
+
+
+class AvecClient:
+    """A connected pool of AVEC destinations behind one scheduler.
+
+    Build with :func:`connect`.  Holds, per endpoint: the handshake
+    :class:`Capabilities`, a negotiated runtime (pipelined where possible),
+    and a registry entry the :class:`DeviceAwareScheduler` scores with
+    handshake ``coalesce_stats`` plus live runtime ``stats()``."""
+
+    def __init__(self, targets, policy: Optional[ConnectPolicy] = None,
+                 registry: Optional[AcceleratorRegistry] = None) -> None:
+        self.policy = policy or ConnectPolicy()
+        self.registry = registry or AcceleratorRegistry()
+        self.scheduler = DeviceAwareScheduler(
+            self.registry, load_penalty=self.policy.load_penalty)
+        self._lock = threading.Lock()
+        self._dial_lock = threading.RLock()   # serializes check-then-dial
+        self._closed = False
+        self._endpoints: dict[str, Endpoint] = {}
+        self._caps: dict[str, Capabilities] = {}
+        self._runtimes: dict[str, HostRuntime] = {}
+        self._codecs: dict[str, str] = {}
+        self._siblings: dict[tuple, AvecSession] = {}
+        self.migration = MigrationManager(self.registry, self.scheduler,
+                                          self._runtime_for)
+        targets = list(targets)
+        if not targets:
+            raise ValueError("connect() needs at least one target")
+        try:
+            for i, t in enumerate(targets):
+                ep = Endpoint.parse(t, i)
+                if ep.name in self._endpoints:
+                    raise ValueError(f"duplicate endpoint name {ep.name!r}")
+                self._endpoints[ep.name] = ep
+                self._dial(ep)
+        except BaseException:
+            self.close()        # don't leak endpoints dialed before the bad one
+            raise
+
+    # -- handshake ---------------------------------------------------------
+    def _dial(self, ep: Endpoint) -> HostRuntime:
+        """Dial one endpoint: open its channel, run the versioned capability
+        handshake, and build the negotiated runtime tier on that channel."""
+        pol = self.policy
+        ch = ep.dial()
+        try:
+            probe = HostRuntime(ch, timeout=pol.timeout)
+            reply = probe.ping({"protocol_version": PROTOCOL_VERSION,
+                                "codecs": list(SUPPORTED_CODECS),
+                                "client": "repro.avec"})
+            caps = Capabilities.from_ping(reply)
+            if caps.protocol_version != PROTOCOL_VERSION:
+                raise HandshakeError(
+                    f"endpoint {ep.name!r} speaks AVEC protocol "
+                    f"v{caps.protocol_version}; this client only speaks "
+                    f"v{PROTOCOL_VERSION}.  Upgrade the older side (the "
+                    f"wire format is not cross-version compatible) or pin "
+                    f"both to the same repro release.")
+            codec = negotiate_codec(pol.codec, caps.codecs)
+            if caps.pipelining and pol.prefer_pipelining \
+                    and _channel_pipelinable(ch):
+                rt: HostRuntime = PipelinedHostRuntime(
+                    ch, codec=codec, timeout=pol.timeout,
+                    copy_results=pol.copy_results,
+                    max_in_flight=pol.max_in_flight,
+                    adaptive_window=pol.adaptive_window)
+            else:
+                rt = HostRuntime(ch, codec=codec, timeout=pol.timeout,
+                                 copy_results=pol.copy_results)
+        except BaseException:
+            try:                # never leak a half-handshaken connection
+                ch.close()
+            except Exception:  # noqa: BLE001 — already failing loudly
+                pass
+            raise
+        with self._lock:
+            self._caps[ep.name] = caps
+            self._runtimes[ep.name] = rt
+            self._codecs[ep.name] = codec
+        # re-dials REBIND the existing pool entry: replacing it would reset
+        # live load accounting (inflight held by concurrent sessions) and
+        # silently clear an explicit mark_unhealthy
+        if self.registry.rebind(ep.name, channel=ch,
+                                capabilities=caps.raw) is None:
+            self.registry.register(ep.spec, channel=ch,
+                                   capabilities=caps.raw)
+        self.scheduler.record_capabilities(ep.name, caps.raw)
+        if hasattr(rt, "stats"):
+            self.scheduler.attach_runtime(ep.name, rt)
+        return rt
+
+    def _runtime_for(self, name: str) -> HostRuntime:
+        """The live runtime for pool member ``name``, re-dialing (with a
+        fresh handshake) if its connection has been closed or failed.  Also
+        the :class:`MigrationManager`'s runtime factory."""
+        with self._dial_lock:   # one dial per endpoint, not one per racer
+            if self._closed:
+                raise ChannelClosed("AvecClient is closed")
+            with self._lock:
+                rt = self._runtimes.get(name)
+            if rt is not None and not getattr(rt.channel, "broken", False) \
+                    and not getattr(rt, "_closed", False) \
+                    and getattr(rt, "_broken", None) is None:
+                return rt
+            return self._dial(self._endpoints[name])
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def destinations(self) -> list[str]:
+        return list(self._endpoints)
+
+    def capabilities(self, name: Optional[str] = None):
+        """Handshake results (one endpoint, or all)."""
+        with self._lock:
+            if name is not None:
+                return self._caps[name]
+            return dict(self._caps)
+
+    def codec_for(self, name: str) -> str:
+        with self._lock:
+            return self._codecs[name]
+
+    def runtime(self, name: str) -> HostRuntime:
+        """The negotiated live runtime for ``name`` (inspection/tests; the
+        facade APIs below are the supported call paths)."""
+        return self._runtime_for(name)
+
+    def stats(self) -> dict:
+        """Per-destination data-plane counters + scheduler snapshots."""
+        out = {}
+        with self._lock:
+            items = list(self._runtimes.items())
+        for name, rt in items:
+            out[name] = rt.stats() if hasattr(rt, "stats") else {
+                "bytes_sent": rt.bytes_sent,
+                "bytes_received": rt.bytes_received}
+        return out
+
+    # -- sessions ----------------------------------------------------------
+    def session(self, cfg: Any, params: Any, lib: str, *,
+                tenant: Optional[str] = None,
+                workload: Optional[Workload] = None,
+                destination: Optional[str] = None,
+                name: str = "session") -> "ClientSession":
+        """A tenant-scoped session whose destination the scheduler picks
+        (capability-fed cost model + live load), with transparent failover.
+        ``workload`` refines the scheduler's estimate; omitted, it is
+        derived from the parameter tree."""
+        w = workload or self._default_workload(lib, params)
+        dest = destination or self._pick_serving(w, lib)
+        return ClientSession(self, cfg, params, lib, dest, tenant=tenant,
+                             workload=w, name=name)
+
+    def serves(self, name: str, lib: str) -> bool:
+        """Whether endpoint ``name`` advertised library ``lib`` in its
+        handshake (endpoints that advertised nothing are assumed capable —
+        older executors simply don't announce their libraries)."""
+        with self._lock:
+            caps = self._caps.get(name)
+        libs = caps.libraries if caps is not None else {}
+        return not libs or lib in libs
+
+    def _pick_serving(self, w: Workload, lib: str) -> str:
+        """Scheduler pick restricted to destinations that advertise ``lib``
+        — health and memory alone must not route a session onto an
+        executor that cannot serve its library."""
+        for va in self.scheduler.candidates(w):
+            if self.serves(va.name, lib):
+                return va.name
+        raise NoDestinationError(
+            f"no healthy destination advertises library {lib!r} "
+            f"(pool: {self.destinations})")
+
+    def _default_workload(self, lib: str, params: Any) -> Workload:
+        # .nbytes avoids np.asarray's device-to-host copy of the whole tree
+        model_bytes = float(sum(
+            getattr(l, "nbytes", None) or np.asarray(l).nbytes
+            for l in jax.tree_util.tree_leaves(params)))
+        # ~2 FLOPs per parameter per forwarded sample: the right order of
+        # magnitude for dense forward passes, good enough to rank endpoints
+        return Workload(lib, flops=max(model_bytes / 2, 1e6),
+                        bytes_out=1e4, bytes_back=1e4,
+                        model_bytes=model_bytes)
+
+    def _sibling(self, sess: "ClientSession", name: str) -> AvecSession:
+        """A secondary session handle for ``sess``'s model on destination
+        ``name`` (sharded ``map``).  Shares the tenant-scoped fingerprint —
+        send-once still applies per destination — and the caller's
+        profiler."""
+        key = (sess.fp, name)
+        with self._lock:
+            sib = self._siblings.get(key)
+        if sib is not None and sib.runtime is self._runtime_for(name):
+            return sib
+        sib = AvecSession(sess.cfg, sess.params, self._runtime_for(name),
+                          sess.lib, profiler=sess.profiler,
+                          name=f"{sess.name}@{name}")
+        sib.fp = sess.fp                # tenant scoping carries over
+        with self._lock:
+            self._siblings[key] = sib
+        return sib
+
+    # -- interception ------------------------------------------------------
+    def intercept(self, module, fn_map: dict, session: "ClientSession"
+                  ) -> InterceptionLibrary:
+        """Interception library over ``module`` with EXPLICIT per-function
+        argument extraction: ``fn_map`` maps a module function name to
+        ``(destination fn, ArgSpec)`` for offloaded functions, or ``None``
+        for functions that stay host-side (still profiled as "Other").
+        Returns the context manager; enter it to install."""
+        offload = {k: v for k, v in fn_map.items() if v is not None}
+        dispatcher = session.make_argspec_dispatcher(offload)
+        return InterceptionLibrary(module, list(fn_map), dispatcher)
+
+    # -- lifecycle ---------------------------------------------------------
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True     # latch: no silent post-close re-dials
+            runtimes = list(self._runtimes.values())
+            self._runtimes.clear()
+            self._siblings.clear()
+        for rt in runtimes:
+            try:
+                rt.close()
+            except Exception:  # noqa: BLE001 — best-effort teardown
+                pass
+
+    def __enter__(self) -> "AvecClient":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+
+class ClientSession(AvecSession):
+    """An :class:`AvecSession` created through the facade: tenant-scoped
+    fingerprint, scheduler-picked destination, transparent failover on node
+    death, and multi-destination ``map`` fan-out."""
+
+    #: failures that MAY mean the destination died (confirmed by a ping
+    #: probe before failing over — a genuine application error from a live
+    #: node is re-raised, not retried elsewhere)
+    _FAILOVER_EXC = (RemoteError, ChannelClosed, TimeoutError, OSError)
+
+    def __init__(self, client: AvecClient, cfg, params, lib: str,
+                 destination: str, *, tenant: Optional[str],
+                 workload: Workload, name: str = "session") -> None:
+        super().__init__(cfg, params, client._runtime_for(destination), lib,
+                         name=name)
+        self.client = client
+        self.tenant = tenant
+        self.workload = workload
+        self.destination = destination
+        if tenant is not None:
+            # destination caches key by fingerprint: prefixing isolates both
+            # the weight entry and the mutable session state per tenant
+            self.fp = f"tenant:{tenant}:{self.fp}"
+        n = client.policy.shadow_every
+        self._shadow = SessionShadow(every_n_calls=n) if n > 0 else None
+        self._steps = 0
+
+    # ------------------------------------------------------------------
+    def call(self, fn: str, args: Any) -> Any:
+        """One profiled execution cycle, with transparent failover: if the
+        destination died (confirmed by a failed ping), the session migrates
+        to the next-best healthy destination — weights via send-once, state
+        from the host-side shadow — and the call is retried once."""
+        try:
+            out = self._tracked_call(fn, args)
+        except self._FAILOVER_EXC as e:
+            if not self._recover_same_destination():
+                self._failover_or_raise(e)
+            out = self._tracked_call(fn, args)
+        self._steps += 1
+        if self._shadow is not None:
+            try:
+                self._shadow.maybe_snapshot(self, self._steps)
+            except self._FAILOVER_EXC:
+                pass            # shadow is best-effort; keep the last one
+        return out
+
+    def _tracked_call(self, fn: str, args: Any) -> Any:
+        """One cycle with the registry's live-load counter held, so the
+        scheduler's queueing (and coalescer-amortization) terms see real
+        in-flight pressure from facade traffic."""
+        reg = self.client.registry
+        dest = self.destination
+        reg.acquire(dest)
+        try:
+            return super().call(fn, args)
+        finally:
+            reg.release(dest)
+
+    def _recover_same_destination(self) -> bool:
+        """Connection-level recovery: when only the CHANNEL died (reset,
+        mid-frame timeout) but the destination process may be fine, re-dial
+        the same endpoint and probe it — cheaper and state-preserving
+        compared to migrating.  The shadow state is restored after
+        reconnecting because the failed call may or may not have executed
+        at the destination; resetting to the last snapshot makes the retry
+        exact either way.  Returns True when the session is ready to retry
+        on the same destination."""
+        if not self.client.policy.failover:
+            return False
+        rt = self.runtime
+        broken = (getattr(rt.channel, "broken", False)
+                  or getattr(rt, "_closed", False)
+                  or getattr(rt, "_broken", None) is not None)
+        if not broken:
+            return False
+        try:
+            fresh = self.client._runtime_for(self.destination)  # re-dials
+            if fresh is rt:
+                return False
+            old_t = fresh.timeout
+            fresh.timeout = min(5.0, old_t)
+            try:
+                fresh.ping()
+            finally:
+                fresh.timeout = old_t
+            self.runtime = fresh
+            self._ready = False
+            self.ensure_model()     # fingerprint hit if the node kept it
+            state = self._shadow.state if self._shadow is not None else None
+            if state is not None:
+                self.runtime.restore(self.fp, state)
+        except Exception:  # noqa: BLE001 — recovery is best-effort
+            return False
+        self.client.registry.mark_healthy(self.destination)
+        return True
+
+    def _failover_or_raise(self, exc: BaseException) -> None:
+        if not self.client.policy.failover:
+            raise exc
+        if self._destination_alive():
+            # a live node answered the probe: the failure is the CALL's
+            # (application error, one slow request) — re-raising beats
+            # migrating state away from a healthy destination
+            raise exc
+        self.client.registry.mark_unhealthy(self.destination)
+        state = self._shadow.state if self._shadow is not None else None
+        if state is None:
+            state = {}          # nothing shadowed yet: restore empty state
+        # never migrate onto a destination that can't serve this library
+        unservable = tuple(n for n in self.client.destinations
+                           if not self.client.serves(n, self.lib))
+        try:
+            new = self.client.migration.migrate(
+                self, self.workload, from_name=self.destination,
+                state=state, exclude=unservable)
+        except NoDestinationError:
+            raise exc           # nowhere to go: surface the original death
+        self.destination = new
+
+    def _destination_alive(self) -> bool:
+        rt = self.runtime
+        old_timeout = rt.timeout
+        rt.timeout = min(5.0, old_timeout)   # probe, don't hang
+        try:
+            rt.ping()
+            return True
+        except Exception:  # noqa: BLE001 — any failure means dead
+            return False
+        finally:
+            rt.timeout = old_timeout
+
+    # ------------------------------------------------------------------
+    def map(self, fn: str, requests: dict, *,
+            batchable: Optional[bool] = None,
+            max_shards: Optional[int] = None) -> dict:
+        """Fan ``{rid: args}`` out across the healthiest destinations (the
+        ROADMAP's sharded-destinations step): requests round-robin over up
+        to ``max_shards`` scheduler-ranked endpoints, each shard streaming
+        through its own (pipelined where negotiated) runtime, weights
+        ensured once per destination.  Only stateless per-request functions
+        belong here — stateful decode streams must stay on one session.
+        ``batchable`` defaults to each peer's advertised coalescing
+        support."""
+        limit = max_shards or self.client.policy.max_shards
+        cands = [va for va in self.client.scheduler.candidates(self.workload)
+                 if self.client.serves(va.name, self.lib)]
+        names = [va.name for va in cands][:limit] or [self.destination]
+        frontends = []
+        for nm in names:
+            sib = self if nm == self.destination else \
+                self.client._sibling(self, nm)
+            sib.ensure_model()
+            caps = self.client.capabilities(nm)
+            b = batchable if batchable is not None else caps.coalesce
+            frontends.append(PipelinedOffloadFrontend(
+                sib.runtime, sib.fp, fn, batchable=b))
+        sharded = ShardedOffloadFrontend(frontends, names=names)
+        # hold the registry's live-load counters for the round-robin
+        # assignment (shard i serves every len(names)-th request) so
+        # concurrent sessions' scheduling sees this fan-out as load
+        reg = self.client.registry
+        counts = [len(range(i, len(requests), len(names)))
+                  for i in range(len(names))]
+        for nm, c in zip(names, counts):
+            for _ in range(c):
+                reg.acquire(nm)
+        try:
+            return sharded.map(requests)
+        finally:
+            for nm, c in zip(names, counts):
+                for _ in range(c):
+                    reg.release(nm)
+            self.last_map_stats = sharded.stats()
+            for fe in frontends:    # release sync-runtime fallback threads
+                fe.close()
+
+
+def connect(targets, *, policy: Optional[ConnectPolicy] = None,
+            registry: Optional[AcceleratorRegistry] = None,
+            **overrides) -> AvecClient:
+    """Open AVEC's front door: handshake every target, negotiate runtime
+    tiers/codecs, and return an :class:`AvecClient` routing through a
+    capability-fed :class:`DeviceAwareScheduler`.
+
+    ``targets`` — iterable of ``"tcp://host:port"`` URLs, in-process
+    :class:`DestinationExecutor` instances, ``(AcceleratorSpec, target)``
+    pairs, or :class:`Endpoint` objects.  ``policy`` (or keyword overrides
+    of :class:`ConnectPolicy` fields, e.g. ``codec="zstd"``) sets host-side
+    preferences; the handshake downgrades anything the peer can't do and
+    raises :class:`HandshakeError` on a protocol-version mismatch."""
+    if overrides:
+        policy = replace(policy or ConnectPolicy(), **overrides)
+    return AvecClient(targets, policy=policy, registry=registry)

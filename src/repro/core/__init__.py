@@ -8,7 +8,9 @@ from repro.core.cache import ModelCache, model_fingerprint  # noqa: F401
 from repro.core.executor import (  # noqa: F401
     DestinationExecutor, HostRuntime, PipelinedHostRuntime, RemoteError,
 )
-from repro.core.interception import InterceptionLibrary, AvecSession  # noqa: F401
+from repro.core.interception import (  # noqa: F401
+    ArgExtractionError, ArgSpec, AvecSession, InterceptionLibrary,
+)
 from repro.core.profiler import AvecProfiler  # noqa: F401
 from repro.core.costmodel import Workload  # noqa: F401
 from repro.core.scheduler import DeviceAwareScheduler, hedged_call  # noqa: F401

@@ -4,7 +4,7 @@ Protocol (msgpack header via core.serialization, tree payloads as buffers;
 every response echoes the request's frame id so pipelined hosts can match
 out-of-order completions):
 
-  {"op": "ping"}                          -> {"ok": True}
+  {"op": "ping", ...client info}          -> {"ok": True} + capabilities
   {"op": "has_model", "fp": ...}          -> {"resident": bool}
   {"op": "put_model", "fp", "lib": name}  + params tree -> {"ok": True,
                                              "transfer_s": float}
@@ -75,7 +75,8 @@ import jax
 import numpy as np
 
 from repro.core.cache import ModelCache
-from repro.core.serialization import (Frame, frame_preamble_ok,
+from repro.core.serialization import (PROTOCOL_VERSION, SUPPORTED_CODECS,
+                                      Frame, frame_preamble_ok,
                                       frame_request_id, pack_message,
                                       unpack_message)
 from repro.core.transport import Channel, ChannelClosed, ProtocolError
@@ -253,7 +254,30 @@ class DestinationExecutor:
 
     # ------------------------------------------------------------------
     def _op_ping(self, meta, tree):
-        return {"ok": True, "name": self.name}, None, "raw"
+        """Liveness probe AND versioned capability handshake.
+
+        The reply advertises everything a connecting host needs to pick its
+        runtime tier and codec without trial-and-error: the wire protocol
+        version, decodable codecs, the op set, per-library function lists,
+        whether ``run`` ops marked ``batchable`` are coalesced (plus the
+        coalescer's live stats, which feed the host's scheduler), and that
+        out-of-order response matching — pipelining — is supported.  Old
+        clients sending a bare ``{"op": "ping"}`` just ignore the extras;
+        version gating is the CLIENT's job (``repro.avec.connect``) so a
+        lone executor never refuses a probe it could answer."""
+        return {
+            "ok": True,
+            "name": self.name,
+            "protocol_version": PROTOCOL_VERSION,
+            "codecs": list(SUPPORTED_CODECS),
+            "ops": sorted(m[4:] for m in dir(self) if m.startswith("_op_")),
+            "libraries": {lib: sorted(fns) for lib, fns in
+                          self.libraries.items()},
+            "batchable_ops": ["run"],
+            "pipelining": True,          # responses echo request ids
+            "coalesce": self._coalescer is not None,
+            "coalesce_stats": self.coalesce_stats,
+        }, None, "raw"
 
     def _op_has_model(self, meta, tree):
         return {"ok": True, "resident": self.cache.has(meta["fp"])}, None, "raw"
@@ -364,6 +388,7 @@ class HostRuntime:
         self.bytes_sent = 0
         self.bytes_received = 0
         self.last_compute_s = 0.0
+        self._closed = False
 
     def _rpc(self, meta: dict, tree=None, codec: str = "raw") -> tuple[dict, Any]:
         req = pack_message(meta, tree, codec=codec)
@@ -375,8 +400,11 @@ class HostRuntime:
             raise RemoteError(rmeta.get("error", "unknown remote error"))
         return rmeta, rtree
 
-    def ping(self) -> dict:
-        return self._rpc({"op": "ping"})[0]
+    def ping(self, client_info: dict | None = None) -> dict:
+        """Liveness probe.  ``client_info`` (protocol version, codecs) rides
+        along for the capability handshake; the reply carries the peer's
+        advertised capabilities (see ``DestinationExecutor._op_ping``)."""
+        return self._rpc({"op": "ping", **(client_info or {})})[0]
 
     def has_model(self, fp: str) -> bool:
         return self._rpc({"op": "has_model", "fp": fp})[0]["resident"]
@@ -406,6 +434,7 @@ class HostRuntime:
         self._rpc({"op": "drop_session", "fp": fp})
 
     def close(self) -> None:
+        self._closed = True     # lets pool owners detect a dead stub
         self.channel.close()
 
 

@@ -12,13 +12,66 @@ and the rerouting dispatcher used by the interceptor.
 from __future__ import annotations
 
 import time
+import warnings
 from concurrent.futures import Future
+from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
 from repro.core.cache import model_fingerprint
 from repro.core.executor import HostRuntime, RemoteError
 from repro.core.profiler import AvecProfiler
 from repro.core.serialization import tree_wire_bytes
+
+
+class ArgExtractionError(TypeError):
+    """An intercepted call did not match its :class:`ArgSpec` — raised
+    instead of silently forwarding the wrong data tree to the destination."""
+
+
+@dataclass(frozen=True)
+class ArgSpec:
+    """Explicit extraction of the offloaded data tree from an intercepted
+    call's ``(*args, **kwargs)``.
+
+    Exactly one of the three forms applies (checked in order):
+
+    * ``position=i``       — the data tree is ``args[i]``
+    * ``keywords=(k, ...)``— the data tree is ``{k: kwargs[k], ...}``
+    * ``extract=fn``       — fully custom: ``fn(args, kwargs) -> tree``
+
+    This replaces the old positional convention (``args[2] if len(args) > 2
+    else kwargs``) which silently forwarded ``kwargs`` — usually ``{}`` —
+    when a caller passed its data positionally but the arity check missed.
+    An ArgSpec that doesn't match the actual call raises
+    :class:`ArgExtractionError` naming the function and the mismatch."""
+
+    position: Optional[int] = None
+    keywords: tuple = ()
+    extract: Optional[Callable[[tuple, dict], Any]] = None
+
+    def __call__(self, fn_name: str, args: tuple, kwargs: dict) -> Any:
+        if self.position is not None:
+            if self.position >= len(args):
+                raise ArgExtractionError(
+                    f"intercepted call {fn_name}(...) has "
+                    f"{len(args)} positional argument(s) but its ArgSpec "
+                    f"expects the data tree at position {self.position}; "
+                    f"pass the data positionally or fix the ArgSpec "
+                    f"(kwargs are never silently substituted)")
+            return args[self.position]
+        if self.keywords:
+            missing = [k for k in self.keywords if k not in kwargs]
+            if missing:
+                raise ArgExtractionError(
+                    f"intercepted call {fn_name}(...) is missing keyword "
+                    f"argument(s) {missing} required by its ArgSpec "
+                    f"(got {sorted(kwargs)})")
+            return {k: kwargs[k] for k in self.keywords}
+        if self.extract is not None:
+            return self.extract(args, kwargs)
+        raise ArgExtractionError(
+            f"ArgSpec for {fn_name} is empty: set position=, keywords=, "
+            f"or extract=")
 
 
 class InterceptionLibrary:
@@ -150,16 +203,61 @@ class AvecSession:
 
     # ------------------------------------------------------------------
     def make_dispatcher(self, offload_fns: dict[str, str]):
-        """Dispatcher for InterceptionLibrary: functions named in
-        ``offload_fns`` (module fn -> destination lib fn) are forwarded; all
-        others run locally (the paper's host/destination kernel split —
-        rendering stays on the host)."""
+        """DEPRECATED positional-convention dispatcher — prefer
+        ``repro.avec.AvecClient.intercept`` with explicit :class:`ArgSpec`
+        per function.
+
+        Functions named in ``offload_fns`` (module fn -> destination lib fn)
+        are forwarded assuming the data tree is ``args[2]`` (after the
+        library API's (net/cfg, params) leading arguments); all others run
+        locally.  A call that matches neither form — fewer than three
+        positional arguments and no keywords — raises
+        :class:`ArgExtractionError` instead of silently forwarding an empty
+        kwargs dict as the data tree (the old behaviour)."""
+        warnings.warn(
+            "AvecSession.make_dispatcher's positional convention is "
+            "deprecated; use repro.avec.AvecClient.intercept with an "
+            "explicit ArgSpec per function", DeprecationWarning, stacklevel=2)
+
         def dispatcher(fn_name, original, *args, **kwargs):
             if fn_name in offload_fns:
                 # convention: the intercepted call's *data* arguments follow
                 # the (net/cfg, params) leading arguments of the library API.
-                data_args = args[2] if len(args) > 2 else kwargs
+                if len(args) > 2:
+                    data_args = args[2]
+                elif kwargs:
+                    data_args = kwargs
+                else:
+                    raise ArgExtractionError(
+                        f"intercepted call {fn_name}(...) carries no "
+                        f"extractable data tree ({len(args)} positional "
+                        f"args, no kwargs); the positional convention "
+                        f"expects the data at args[2] — use "
+                        f"AvecClient.intercept with an explicit ArgSpec")
                 return self.call(offload_fns[fn_name], data_args)
+            t0 = time.perf_counter()
+            out = original(*args, **kwargs)
+            self.profiler.record_other(time.perf_counter() - t0)
+            return out
+        return dispatcher
+
+    def make_argspec_dispatcher(self, fn_map: dict[str, tuple[str, ArgSpec]]):
+        """Dispatcher with per-function explicit extraction: ``fn_map`` maps
+        an intercepted module function to ``(destination fn, ArgSpec)``.
+        Functions not in the map run locally (host-side kernels), timed into
+        the profiler's "Other" bucket.  A call that doesn't match its
+        ArgSpec raises :class:`ArgExtractionError` — never a silent
+        wrong-tree forward."""
+        for name, (remote_fn, spec) in fn_map.items():
+            if not isinstance(spec, ArgSpec):
+                raise TypeError(
+                    f"fn_map[{name!r}] must be (remote_fn, ArgSpec); "
+                    f"got {spec!r}")
+
+        def dispatcher(fn_name, original, *args, **kwargs):
+            if fn_name in fn_map:
+                remote_fn, spec = fn_map[fn_name]
+                return self.call(remote_fn, spec(fn_name, args, kwargs))
             t0 = time.perf_counter()
             out = original(*args, **kwargs)
             self.profiler.record_other(time.perf_counter() - t0)

@@ -119,7 +119,10 @@ class MigrationManager:
         if state is not None:
             session.runtime.restore(session.fp, state)
         try:
-            old_rt.channel.close()
+            # runtime-level close, not bare channel close: a pipelined
+            # runtime must also fail its in-flight futures so no caller
+            # hangs on a response the dead destination will never send
+            old_rt.close()
         except Exception:  # noqa: BLE001
             pass
         self.migrations.append({

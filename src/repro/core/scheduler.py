@@ -15,7 +15,17 @@ pulled at scoring time), or push snapshots explicitly via
 shows byte-level backpressure (send stalls per completed request, measured
 per snapshot interval and EMA-decayed so a recovered link is forgiven)
 gets its predicted latency penalized — the analytic link model can't see a
-saturated socket buffer, but the runtime counters can."""
+saturated socket buffer, but the runtime counters can.
+
+Coalescer awareness (ROADMAP item, fed by the capability handshake): a
+destination whose executor micro-batches concurrent ``run`` ops advertises
+``coalesce`` + live ``coalesce_stats`` in its ping reply; push them via
+:meth:`DeviceAwareScheduler.record_capabilities`.  Its observed average
+batch size discounts the QUEUEING term of the score — n requests already
+in flight there cost ~n/avg_batch stacked dispatches, not n serial ones —
+so under load a batch-amortizing destination correctly outbids an
+otherwise identical serial one (base link/compute terms are untouched:
+coalescing amortizes dispatch, it does not speed up the wire)."""
 from __future__ import annotations
 
 import concurrent.futures as _fut
@@ -45,6 +55,7 @@ class DeviceAwareScheduler:
         self._stall_rate: dict[str, float] = {}
         self._stall_seen: dict[str, float] = {}
         self._runtimes: dict[str, object] = {}
+        self._avg_batch: dict[str, float] = {}
 
     # -- data-plane feedback -----------------------------------------------
     def attach_runtime(self, name: str, runtime) -> None:
@@ -89,6 +100,29 @@ class DeviceAwareScheduler:
             self._stall_seen[name] = now
             self._runtime_stats[name] = dict(stats)
 
+    def record_capabilities(self, name: str, capabilities: dict) -> None:
+        """Ingest a handshake capability dict for pool member ``name``
+        (``DestinationExecutor._op_ping`` reply / ``repro.avec``
+        ``Capabilities.raw``).  A coalescing destination's observed average
+        batch size (``coalesce_stats``: requests/batches) becomes its
+        dispatch-amortization factor; a destination that coalesces but has
+        no traffic yet gets a conservative nominal factor so the capability
+        still tips ties under load."""
+        coalesce = bool(capabilities.get("coalesce"))
+        cs = capabilities.get("coalesce_stats") or {}
+        avg = 1.0
+        if coalesce:
+            if cs.get("batches"):
+                avg = max(float(cs["requests"]) / float(cs["batches"]), 1.0)
+            else:
+                avg = 2.0       # capable but unmeasured: assume pairs
+        with self._stats_lock:
+            self._avg_batch[name] = avg
+
+    def _dispatch_amortization(self, name: str) -> float:
+        with self._stats_lock:
+            return self._avg_batch.get(name, 1.0)
+
     def runtime_stats(self, name: str | None = None) -> dict:
         """The recorded data-plane snapshots (all members, or one)."""
         with self._stats_lock:
@@ -106,7 +140,10 @@ class DeviceAwareScheduler:
         return 1.0 + self.backpressure_penalty * rate
 
     def score(self, w: Workload, va: VirtualAccelerator) -> float:
-        base = estimate_request_time(w, va.spec, va.inflight,
+        # queueing discount: n in-flight requests at a coalescing
+        # destination collapse into ~n/avg_batch stacked dispatches
+        eff_inflight = va.inflight / self._dispatch_amortization(va.name)
+        base = estimate_request_time(w, va.spec, eff_inflight,
                                      self.load_penalty)
         return base * self._backpressure_factor(va.name)
 

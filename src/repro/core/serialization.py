@@ -88,6 +88,17 @@ MAGIC = b"AVC2"                     # versioned: v1 frames were b"AVEC"
 PREAMBLE = 16                       # magic(4) + request_id(8) + header_len(4)
 _PREAMBLE_FMT = "<4sQI"
 
+# The AVEC wire protocol version spoken by this node (frame layout + op set).
+# Advertised by the executor's ping capability handshake and checked by
+# ``repro.avec.connect`` — peers on different versions must fail loudly at
+# connect time, not misparse frames mid-stream.
+PROTOCOL_VERSION = 2
+
+# Codecs this node can encode AND decode (see module docstring).  zstd is
+# always listed: the encoder falls back to zlib and records the algorithm in
+# the leaf meta, so any peer of the same protocol version can decode it.
+SUPPORTED_CODECS = ("raw", "zstd", "int8")
+
 
 # ---------------------------------------------------------------------------
 # Vectored frame

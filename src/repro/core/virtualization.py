@@ -76,12 +76,16 @@ PAPER_TESTBED = {"device": JETSON_NANO, "edge": JETSON_TX2, "cloud": CLOUD_RTX}
 
 @dataclass
 class VirtualAccelerator:
-    """A registry entry: spec + live state (channel, load, health)."""
+    """A registry entry: spec + live state (channel, load, health) plus the
+    capabilities the endpoint advertised at handshake time (protocol
+    version, codecs, pipelining, coalescing — see
+    ``DestinationExecutor._op_ping``)."""
     spec: AcceleratorSpec
     channel: object = None          # transport channel to the executor (live)
     inflight: int = 0
     healthy: bool = True
     total_requests: int = 0
+    capabilities: dict = field(default_factory=dict)
 
     @property
     def name(self) -> str:
@@ -95,10 +99,28 @@ class AcceleratorRegistry:
         self._lock = threading.Lock()
         self._pool: dict[str, VirtualAccelerator] = {}
 
-    def register(self, spec: AcceleratorSpec, channel=None) -> VirtualAccelerator:
+    def register(self, spec: AcceleratorSpec, channel=None,
+                 capabilities: Optional[dict] = None) -> VirtualAccelerator:
         with self._lock:
-            va = VirtualAccelerator(spec=spec, channel=channel)
+            va = VirtualAccelerator(spec=spec, channel=channel,
+                                    capabilities=dict(capabilities or {}))
             self._pool[spec.name] = va
+            return va
+
+    def rebind(self, name: str, channel=None,
+               capabilities: Optional[dict] = None) -> Optional[VirtualAccelerator]:
+        """Swap the live channel/capabilities of an EXISTING entry without
+        resetting its state (inflight, total_requests, healthy) — what a
+        reconnect wants, where ``register`` would erase concurrent load
+        accounting and silently clear an explicit mark_unhealthy.  Returns
+        the entry, or None if the name is unknown."""
+        with self._lock:
+            va = self._pool.get(name)
+            if va is None:
+                return None
+            va.channel = channel
+            if capabilities is not None:
+                va.capabilities = dict(capabilities)
             return va
 
     def deregister(self, name: str) -> None:

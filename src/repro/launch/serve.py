@@ -1,13 +1,16 @@
-"""Serving entrypoint: stand up a destination executor (TCP), drive it as a
-pipelined offload host, or run the continuous-batching engine locally.
+"""Serving entrypoint: stand up a destination executor (TCP), drive one or
+more destinations as an ``avec.connect`` host, or run the continuous-batching
+engine locally.
 
   # destination node (the "edge/cloud GPU server"):
   PYTHONPATH=src python -m repro.launch.serve --role destination --port 9000
 
-  # host node streaming requests at that destination (prints the adaptive
-  # in-flight window + backpressure counters from the runtime stats):
+  # host node streaming requests at destination(s) through the facade —
+  # handshake-negotiated pipelined runtime, scheduler-routed, sharded when
+  # several destinations are given (prints the adaptive in-flight window +
+  # backpressure counters from the runtime stats):
   PYTHONPATH=src python -m repro.launch.serve --role host \
-      --connect 127.0.0.1:9000 --requests 32
+      --connect 127.0.0.1:9000,127.0.0.1:9001 --requests 32
 
   # local engine demo:
   PYTHONPATH=src python -m repro.launch.serve --role local --requests 8
@@ -20,13 +23,13 @@ import time
 import jax
 import numpy as np
 
+from repro import avec
 from repro.configs import get_arch, list_archs, reduced
-from repro.core.executor import DestinationExecutor, PipelinedHostRuntime
+from repro.core.executor import DestinationExecutor
 from repro.core.library import make_model_library
-from repro.core.transport import TCPChannel, TCPServer
+from repro.core.transport import TCPServer
 from repro.models import model as M
-from repro.serving.engine import (PipelinedOffloadFrontend, Request,
-                                  ServingEngine)
+from repro.serving.engine import Request, ServingEngine
 
 
 def main() -> None:
@@ -36,7 +39,14 @@ def main() -> None:
                     choices=["local", "destination", "host"])
     ap.add_argument("--port", type=int, default=0)
     ap.add_argument("--connect", default="127.0.0.1:9000",
-                    help="host role: destination address host:port")
+                    help="host role: comma-separated destination "
+                         "addresses host:port[,host:port...]")
+    ap.add_argument("--codec", default="raw",
+                    help="host role: requested wire codec (downgraded to "
+                         "what the peer advertises)")
+    ap.add_argument("--coalesce", action="store_true",
+                    help="destination role: micro-batch concurrent "
+                         "batchable run ops into stacked dispatches")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--max-in-flight", type=int, default=8,
@@ -50,44 +60,55 @@ def main() -> None:
 
     if args.role == "destination":
         lib = make_model_library(cfg, max_cache_len=args.max_len)
-        ex = DestinationExecutor({"lm": lib}, name=f"{args.arch}-dest")
+        ex = DestinationExecutor({"lm": lib}, name=f"{args.arch}-dest",
+                                 coalesce=args.coalesce)
         server = TCPServer(ex.handle, port=args.port).start()
         print(f"destination executor for {args.arch} on port {server.port} "
-              f"(ctrl-c to stop)")
+              f"(coalesce={args.coalesce}; ctrl-c to stop)")
         try:
             while True:
                 time.sleep(1)
         except KeyboardInterrupt:
             server.stop()
+            ex.shutdown()
         return
 
     if args.role == "host":
-        host, _, port = args.connect.rpartition(":")
-        rt = PipelinedHostRuntime(TCPChannel.connect(host, int(port)),
-                                  max_in_flight=args.max_in_flight)
-        fp = f"{args.arch}-seed{args.seed}"
-        rt.put_model(fp, "lm", params)
-        fe = PipelinedOffloadFrontend(rt, fp, "score")
-        rng = np.random.default_rng(args.seed)
-        prompts = {f"r{i}": {"tokens": rng.integers(
-            0, cfg.vocab_size, (1, 16)).astype(np.int32),
-            "targets": rng.integers(0, cfg.vocab_size, (1, 16))
-            .astype(np.int32)} for i in range(args.requests)}
-        t0 = time.perf_counter()
-        fe.map(prompts)
-        dt = time.perf_counter() - t0
-        s = fe.stats()
-        print(f"{args.requests} offloaded score() calls in {dt:.2f}s "
-              f"({args.requests / dt:.1f} req/s)")
-        print(f"adaptive window {s['window']}/{s['max_in_flight']} "
-              f"(wire~{s['wire_ema_s'] * 1e3:.1f}ms "
-              f"compute~{s['compute_ema_s'] * 1e3:.1f}ms), "
-              f"send stalls {s['send_stalls']}, "
-              f"resumed sends {s['sends_resumed']}, "
-              f"recv retries {s['recv_retries']}, "
-              f"{s['bytes_sent'] / 1e6:.1f}MB out / "
-              f"{s['bytes_received'] / 1e6:.1f}MB in")
-        rt.close()
+        targets = [f"tcp://{addr.strip()}"
+                   for addr in args.connect.split(",") if addr.strip()]
+        with avec.connect(targets, codec=args.codec, shadow_every=0,
+                          max_in_flight=args.max_in_flight) as client:
+            for name in client.destinations:
+                caps = client.capabilities(name)
+                print(f"[handshake] {name}: protocol "
+                      f"v{caps.protocol_version}, "
+                      f"runtime {type(client.runtime(name)).__name__}, "
+                      f"codec {client.codec_for(name)}, "
+                      f"coalesce={caps.coalesce}")
+            sess = client.session(cfg, params, "lm")
+            rng = np.random.default_rng(args.seed)
+            prompts = {f"r{i}": {"tokens": rng.integers(
+                0, cfg.vocab_size, (1, 16)).astype(np.int32),
+                "targets": rng.integers(0, cfg.vocab_size, (1, 16))
+                .astype(np.int32)} for i in range(args.requests)}
+            t0 = time.perf_counter()
+            sess.map("score", prompts)
+            dt = time.perf_counter() - t0
+            print(f"{args.requests} offloaded score() calls in {dt:.2f}s "
+                  f"({args.requests / dt:.1f} req/s) over "
+                  f"{sess.last_map_stats['assigned']}")
+            for name, s in client.stats().items():
+                if "window" not in s:
+                    continue
+                print(f"[{name}] adaptive window "
+                      f"{s['window']}/{s['max_in_flight']} "
+                      f"(wire~{s['wire_ema_s'] * 1e3:.1f}ms "
+                      f"compute~{s['compute_ema_s'] * 1e3:.1f}ms), "
+                      f"send stalls {s['send_stalls']}, "
+                      f"resumed sends {s['sends_resumed']}, "
+                      f"recv retries {s['recv_retries']}, "
+                      f"{s['bytes_sent'] / 1e6:.1f}MB out / "
+                      f"{s['bytes_received'] / 1e6:.1f}MB in")
         return
 
     eng = ServingEngine(cfg, params, max_batch=args.max_batch,

@@ -21,7 +21,8 @@ them into stacked dispatches.
 from __future__ import annotations
 
 import collections
-from concurrent.futures import Future
+import itertools
+from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
@@ -188,14 +189,26 @@ class PipelinedOffloadFrontend:
         self.fn = fn
         self.batchable = batchable
         self.submitted = 0
+        self._pool: Optional[ThreadPoolExecutor] = None
 
     def submit(self, args: Any) -> Future:
         """Async submit; Future resolves to the output tree (waiting on it
-        pumps the channel — the pipelined runtime has no reader thread)."""
+        pumps the channel — the pipelined runtime has no reader thread).
+
+        A synchronous runtime (no ``run_async``: a negotiated-down peer or
+        a request-only channel) degrades to one worker thread per frontend:
+        requests on THIS destination serialize, but shards on other
+        destinations still overlap — the facade's multi-destination ``map``
+        stays concurrent end to end."""
         self.submitted += 1
-        inner = self.runtime.run_async(self.fp, self.fn, args,
-                                       batchable=self.batchable)
-        return self.runtime.chain(inner, lambda meta, tree: tree)
+        if hasattr(self.runtime, "run_async"):
+            inner = self.runtime.run_async(self.fp, self.fn, args,
+                                           batchable=self.batchable)
+            return self.runtime.chain(inner, lambda meta, tree: tree)
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(max_workers=1)
+        return self._pool.submit(self.runtime.run, self.fp, self.fn, args,
+                                 batchable=self.batchable)
 
     def map(self, requests: dict) -> dict:
         """Submit ``{rid: args}`` keeping the pipeline full; gather all."""
@@ -209,6 +222,55 @@ class PipelinedOffloadFrontend:
         rt_stats = (self.runtime.stats()
                     if hasattr(self.runtime, "stats") else {})
         return {"submitted": self.submitted, **rt_stats}
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)
+            self._pool = None
+
+
+class ShardedOffloadFrontend:
+    """Fans independent requests across several destination frontends (the
+    ROADMAP's *sharded destinations* step): one
+    :class:`PipelinedOffloadFrontend` per destination, requests assigned
+    round-robin, every shard's pipeline kept full concurrently.
+
+    The shard router needs no new wire format — vectored frames are already
+    per-request, so sharding is purely a host-side assignment problem.
+    Results gather back under their request ids regardless of which shard
+    (or in what order) served them."""
+
+    def __init__(self, frontends: list, names: Optional[list] = None) -> None:
+        if not frontends:
+            raise ValueError("sharded frontend needs at least one shard")
+        self.frontends = list(frontends)
+        self.names = list(names) if names is not None else [
+            f"shard{i}" for i in range(len(frontends))]
+        self.assigned = [0] * len(self.frontends)
+
+    def submit(self, args: Any) -> Future:
+        """Route one request to the least-loaded shard (by assignment)."""
+        i = min(range(len(self.frontends)), key=lambda j: self.assigned[j])
+        self.assigned[i] += 1
+        return self.frontends[i].submit(args)
+
+    def map(self, requests: dict) -> dict:
+        """Round-robin ``{rid: args}`` over the shards, gather all results.
+        Submission interleaves shards so every destination's pipeline fills
+        before any result is awaited."""
+        rr = itertools.cycle(range(len(self.frontends)))
+        futs = {}
+        for rid, args in requests.items():
+            i = next(rr)
+            self.assigned[i] += 1
+            futs[rid] = self.frontends[i].submit(args)
+        return {rid: fut.result() for rid, fut in futs.items()}
+
+    def stats(self) -> dict:
+        """Per-shard frontend/data-plane counters keyed by shard name."""
+        return {"assigned": dict(zip(self.names, self.assigned)),
+                "shards": {n: fe.stats()
+                           for n, fe in zip(self.names, self.frontends)}}
 
 
 # ---------------------------------------------------------------------------

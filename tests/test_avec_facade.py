@@ -1,0 +1,423 @@
+"""repro.avec facade: versioned capability handshake (upgrade/downgrade/
+reject), scheduler-routed sessions, transparent mid-stream failover,
+multi-destination map sharding, tenant isolation, and the explicit ArgSpec
+interception path that replaced the positional convention."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import avec
+from repro.configs import get_arch, reduced
+from repro.core import (AcceleratorRegistry, ArgExtractionError, ArgSpec,
+                        DestinationExecutor, DeviceAwareScheduler,
+                        HostRuntime, PipelinedHostRuntime, Workload)
+from repro.core.library import make_model_library
+from repro.core.serialization import PROTOCOL_VERSION
+from repro.core.transport import DirectChannel, TCPServer
+from repro.core.virtualization import JETSON_TX2
+from repro.models import model as M
+from repro.serving.engine import generate_sequential
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = reduced(get_arch("granite-3-2b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    lib = make_model_library(cfg, max_cache_len=32)
+    return cfg, params, lib
+
+
+def _counting_lib(lib, hits):
+    out = {}
+    for name, fn in lib.items():
+        def wrap(fn=fn, name=name):
+            def g(p, s, a):
+                hits[name] = hits.get(name, 0) + 1
+                return fn(p, s, a)
+            return g
+        out[name] = wrap()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# handshake: upgrade / downgrade / reject
+# ---------------------------------------------------------------------------
+
+def test_handshake_auto_upgrades_pipelining_over_tcp(lm):
+    """A pipelining-capable peer on a full-duplex channel gets the pipelined
+    runtime without the caller naming a runtime class (acceptance
+    criterion)."""
+    cfg, params, lib = lm
+    ex = DestinationExecutor({"lm": lib}, name="tcp-dest")
+    server = TCPServer(ex.handle).start()
+    try:
+        with avec.connect([f"tcp://127.0.0.1:{server.port}"]) as client:
+            name = client.destinations[0]
+            caps = client.capabilities(name)
+            assert caps.protocol_version == PROTOCOL_VERSION
+            assert "raw" in caps.codecs and caps.pipelining
+            assert "run" in caps.ops and "ping" in caps.ops
+            assert caps.libraries == {"lm": sorted(lib)}
+            assert isinstance(client.runtime(name), PipelinedHostRuntime)
+            sess = client.session(cfg, params, "lm")
+            out = sess.call("prefill", {"tokens": np.zeros((1, 4), np.int32)})
+            assert out["logits"].shape[0] == 1
+    finally:
+        server.stop()
+
+
+def test_handshake_rejects_protocol_version_mismatch(lm):
+    """A peer on a different wire protocol is refused at connect time with
+    an actionable message naming both versions (acceptance criterion)."""
+    cfg, params, lib = lm
+
+    class FutureExecutor(DestinationExecutor):
+        def _op_ping(self, meta, tree):
+            m, t, c = super()._op_ping(meta, tree)
+            m["protocol_version"] = PROTOCOL_VERSION + 7
+            return m, t, c
+
+    with pytest.raises(avec.HandshakeError) as ei:
+        avec.connect([FutureExecutor({"lm": lib}, name="future")])
+    msg = str(ei.value)
+    assert f"v{PROTOCOL_VERSION + 7}" in msg and f"v{PROTOCOL_VERSION}" in msg
+    assert "future" in msg
+
+
+def test_handshake_downgrades_codec_and_pipelining(lm):
+    """A peer that can't decode the requested codec or match responses out
+    of order gets the synchronous runtime and the mandatory raw codec."""
+    cfg, params, lib = lm
+
+    class LimitedExecutor(DestinationExecutor):
+        def _op_ping(self, meta, tree):
+            m, t, c = super()._op_ping(meta, tree)
+            m["codecs"] = ["raw"]
+            m["pipelining"] = False
+            return m, t, c
+
+    ex = LimitedExecutor({"lm": lib}, name="limited")
+    server = TCPServer(ex.handle).start()
+    try:
+        with avec.connect([f"tcp://127.0.0.1:{server.port}"],
+                          codec="zstd") as client:
+            name = client.destinations[0]
+            rt = client.runtime(name)
+            assert type(rt) is HostRuntime          # not pipelined
+            assert client.codec_for(name) == "raw"  # zstd downgraded
+            # still fully functional
+            sess = client.session(cfg, params, "lm")
+            sess.call("prefill", {"tokens": np.zeros((1, 4), np.int32)})
+    finally:
+        server.stop()
+
+
+def test_request_only_channel_downgrades_pipelining(lm):
+    """Even a pipelining-capable peer stays on the sync runtime when the
+    channel can't keep frames in flight (DirectChannel is request-only)."""
+    cfg, params, lib = lm
+    with avec.connect([DestinationExecutor({"lm": lib}, name="inproc")]) \
+            as client:
+        assert type(client.runtime("inproc")) is HostRuntime
+        assert client.capabilities("inproc").pipelining  # peer could, channel can't
+
+
+# ---------------------------------------------------------------------------
+# scheduler routing + failover
+# ---------------------------------------------------------------------------
+
+def test_mid_stream_failover_reroutes_transparently(lm):
+    """Destination dies mid-decode-stream; the next sess.call migrates to
+    the runner-up (state from the host shadow) and retries — the stream is
+    byte-identical to an uninterrupted run and the caller never sees the
+    error."""
+    cfg, params, lib = lm
+    executors = {n: DestinationExecutor({"lm": lib}, name=n)
+                 for n in ("edge-a", "edge-b")}
+    targets = [(dataclasses.replace(JETSON_TX2, name=n), ex)
+               for n, ex in executors.items()]
+    with avec.connect(targets) as client:
+        sess = client.session(cfg, params, "lm", destination="edge-a")
+        prompt = [5, 17, 3, 99, 42, 7]
+        want = generate_sequential(cfg, params, prompt, 6, max_len=32)
+        sess.call("prefill", {"tokens": np.asarray([prompt], np.int32)})
+        got = [want[0]]
+        for step in range(1, 6):
+            if step == 3:
+                executors["edge-a"].fail = True     # die mid-stream
+            out = sess.call("decode",
+                            {"tokens": np.asarray([[got[-1]]], np.int32)})
+            got.append(int(np.argmax(out["logits"][0, 0, :cfg.vocab_size])))
+        assert got == want
+        assert sess.destination == "edge-b"
+        assert client.migration.migrations[0]["from"] == "edge-a"
+        assert not client.registry.get("edge-a").healthy
+        # sess.call traffic counted into the registry's load tracking
+        assert client.registry.get("edge-b").total_requests >= 3
+        assert client.registry.get("edge-b").inflight == 0
+
+
+def test_application_errors_do_not_failover(lm):
+    """A RemoteError from a HEALTHY destination (bad function name) is an
+    application bug: re-raised, never retried on another node."""
+    cfg, params, lib = lm
+    executors = [DestinationExecutor({"lm": lib}, name=n)
+                 for n in ("a", "b")]
+    with avec.connect(executors) as client:
+        sess = client.session(cfg, params, "lm", destination="a")
+        sess.ensure_model()
+        from repro.core.executor import RemoteError
+        with pytest.raises(RemoteError):
+            sess.call("no_such_fn", {"x": np.zeros(1, np.float32)})
+        assert sess.destination == "a"              # no re-route
+        assert client.migration.migrations == []
+
+
+def test_connection_blip_recovers_on_same_destination(lm):
+    """A dead CHANNEL with a live destination process re-dials the same
+    endpoint (state restored from the shadow) instead of migrating — no
+    unhealthy mark, no migration record, stream intact."""
+    cfg, params, lib = lm
+    ex = DestinationExecutor({"lm": lib}, name="only")
+    server = TCPServer(ex.handle).start()
+    try:
+        with avec.connect([f"tcp://127.0.0.1:{server.port}"]) as client:
+            sess = client.session(cfg, params, "lm")
+            prompt = [5, 17, 3, 99]
+            want = generate_sequential(cfg, params, prompt, 3, max_len=32)
+            sess.call("prefill", {"tokens": np.asarray([prompt], np.int32)})
+            # simulate a connection reset between calls
+            client.runtime(sess.destination).channel._fail()
+            out = sess.call("decode",
+                            {"tokens": np.asarray([[want[0]]], np.int32)})
+            assert int(np.argmax(out["logits"][0, 0, :cfg.vocab_size])) \
+                == want[1]
+            assert client.migration.migrations == []
+            assert client.registry.get(sess.destination).healthy
+    finally:
+        server.stop()
+
+
+def test_library_aware_routing_and_sharding(lm):
+    """Sessions route (and map shards) only onto destinations whose
+    handshake advertised the session's library; a library nobody serves is
+    a loud NoDestinationError."""
+    from repro.core.scheduler import NoDestinationError
+    cfg, params, lib = lm
+    ex_lm = DestinationExecutor({"lm": lib}, name="has-lm")
+    ex_other = DestinationExecutor({"other": lib}, name="no-lm")
+    rng = np.random.default_rng(2)
+    reqs = {f"r{i}": {"tokens": rng.integers(
+        0, cfg.vocab_size, (1, 8)).astype(np.int32),
+        "targets": rng.integers(0, cfg.vocab_size, (1, 8)).astype(np.int32)}
+        for i in range(2)}
+    with avec.connect([ex_other, ex_lm]) as client:
+        sess = client.session(cfg, params, "lm")
+        assert sess.destination == "has-lm"
+        sess.map("score", reqs)
+        assert list(sess.last_map_stats["assigned"]) == ["has-lm"]
+        with pytest.raises(NoDestinationError, match="nothere"):
+            client.session(cfg, params, "nothere")
+
+
+def test_client_close_latches(lm):
+    cfg, params, lib = lm
+    from repro.core.transport import ChannelClosed
+    client = avec.connect([DestinationExecutor({"lm": lib}, name="x")])
+    client.close()
+    with pytest.raises(ChannelClosed):
+        client.runtime("x")
+
+
+# ---------------------------------------------------------------------------
+# sharded map
+# ---------------------------------------------------------------------------
+
+def test_map_shards_across_destinations(lm):
+    """session.map fans a stateless batch over every healthy destination
+    (ROADMAP sharded-destinations): both executors serve requests, results
+    match a single-destination run, ids map back correctly."""
+    cfg, params, lib = lm
+    hits_a, hits_b = {}, {}
+    ex_a = DestinationExecutor({"lm": _counting_lib(lib, hits_a)}, name="a")
+    ex_b = DestinationExecutor({"lm": _counting_lib(lib, hits_b)}, name="b")
+    rng = np.random.default_rng(0)
+    reqs = {f"r{i}": {"tokens": rng.integers(
+        0, cfg.vocab_size, (1, 8)).astype(np.int32),
+        "targets": rng.integers(0, cfg.vocab_size, (1, 8)).astype(np.int32)}
+        for i in range(6)}
+    with avec.connect([ex_a, ex_b]) as client:
+        sess = client.session(cfg, params, "lm")
+        out = sess.map("score", reqs)
+    assert set(out) == set(reqs)
+    assert hits_a.get("score", 0) > 0 and hits_b.get("score", 0) > 0
+    assert hits_a["score"] + hits_b["score"] == len(reqs)
+    assert sorted(sess.last_map_stats["assigned"].values()) == [3, 3]
+    # facade traffic is visible to the scheduler's load terms: the map
+    # held (and then released) the registry's live-load counters
+    for nm in ("a", "b"):
+        va = client.registry.get(nm)
+        assert va.total_requests >= 3 and va.inflight == 0
+    # results identical to an unsharded reference
+    ref_ex = DestinationExecutor({"lm": lib}, name="ref")
+    with avec.connect([ref_ex]) as ref_client:
+        ref_out = ref_client.session(cfg, params, "lm").map("score", reqs)
+    for rid in reqs:
+        np.testing.assert_allclose(np.asarray(out[rid]["loss"]),
+                                   np.asarray(ref_out[rid]["loss"]),
+                                   atol=1e-5)
+
+
+def test_map_respects_max_shards(lm):
+    cfg, params, lib = lm
+    exs = [DestinationExecutor({"lm": lib}, name=f"d{i}") for i in range(3)]
+    rng = np.random.default_rng(1)
+    reqs = {f"r{i}": {"tokens": rng.integers(
+        0, cfg.vocab_size, (1, 8)).astype(np.int32),
+        "targets": rng.integers(0, cfg.vocab_size, (1, 8)).astype(np.int32)}
+        for i in range(4)}
+    with avec.connect(exs) as client:
+        sess = client.session(cfg, params, "lm")
+        sess.map("score", reqs, max_shards=2)
+        assert len(sess.last_map_stats["assigned"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# tenant isolation
+# ---------------------------------------------------------------------------
+
+def test_tenant_scoped_fingerprint_caches(lm):
+    """Two tenants sharing weights get DISTINCT destination cache entries —
+    mutable serving state (KV caches) can never leak across tenants — while
+    two sessions of the SAME tenant share one send-once entry."""
+    cfg, params, lib = lm
+    ex = DestinationExecutor({"lm": lib}, name="shared")
+    with avec.connect([ex]) as client:
+        s_a = client.session(cfg, params, "lm", tenant="acme")
+        s_b = client.session(cfg, params, "lm", tenant="bravo")
+        s_none = client.session(cfg, params, "lm")
+        assert len({s_a.fp, s_b.fp, s_none.fp}) == 3
+        assert s_a.ensure_model() is False      # transferred
+        assert s_b.ensure_model() is False      # NOT a hit on acme's entry
+        assert ex.cache.stats()["entries"] >= 2
+
+        # same tenant, new session: send-once cache hit
+        s_a2 = client.session(cfg, params, "lm", tenant="acme")
+        assert s_a2.ensure_model() is True
+
+        # decode state is per-tenant: interleaved streams don't interact
+        tok = np.asarray([[3, 1, 4, 1]], np.int32)
+        s_a.call("prefill", {"tokens": tok})
+        s_b.call("prefill", {"tokens": tok})
+        out_a1 = s_a.call("decode", {"tokens": tok[:, :1]})
+        # bravo's stream advancing must not move acme's position
+        s_b.call("decode", {"tokens": tok[:, :1]})
+        s_b.call("decode", {"tokens": tok[:, :1]})
+        ex2 = DestinationExecutor({"lm": lib}, name="iso-ref")
+        with avec.connect([ex2]) as ref:
+            r = ref.session(cfg, params, "lm", tenant="acme")
+            r.call("prefill", {"tokens": tok})
+            ref_a1 = r.call("decode", {"tokens": tok[:, :1]})
+        np.testing.assert_allclose(np.asarray(out_a1["logits"]),
+                                   np.asarray(ref_a1["logits"]), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# coalescer-aware scheduling
+# ---------------------------------------------------------------------------
+
+def test_scheduler_coalesce_capability_discounts_queueing():
+    """Under equal load, a destination whose handshake advertises an
+    effective coalescer outbids an identical serial one; unloaded, the base
+    cost model is untouched."""
+    reg = AcceleratorRegistry()
+    reg.register(dataclasses.replace(JETSON_TX2, name="serial"))
+    reg.register(dataclasses.replace(JETSON_TX2, name="batcher"))
+    sched = DeviceAwareScheduler(reg)
+    sched.record_capabilities("batcher", {
+        "coalesce": True,
+        "coalesce_stats": {"batches": 10, "requests": 40, "max_batch": 8}})
+    w = Workload("w", flops=1e9, bytes_out=1e5, bytes_back=1e5,
+                 model_bytes=1e6)
+    va_s, va_b = reg.get("serial"), reg.get("batcher")
+    assert sched.score(w, va_s) == pytest.approx(sched.score(w, va_b))
+    va_s.inflight = va_b.inflight = 8
+    assert sched.score(w, va_b) < sched.score(w, va_s)
+    assert sched.pick(w).name == "batcher"
+
+
+def test_handshake_feeds_coalesce_stats_to_scheduler(lm):
+    """avec.connect pushes the ping reply's coalesce_stats into the
+    scheduler; with traffic on the coalescing destination it wins ties
+    under load."""
+    cfg, params, lib = lm
+    ex_plain = DestinationExecutor({"lm": lib}, name="plain")
+    ex_co = DestinationExecutor({"lm": lib}, name="co", coalesce=True)
+    try:
+        with avec.connect([ex_plain, ex_co]) as client:
+            w = Workload("w", flops=1e9, bytes_out=1e4, bytes_back=1e4,
+                         model_bytes=1e6)
+            for name in ("plain", "co"):
+                client.registry.get(name).inflight = 6
+            assert client.scheduler.pick(w).name == "co"
+    finally:
+        ex_co.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# ArgSpec interception (regression: no silent kwargs fallback)
+# ---------------------------------------------------------------------------
+
+def test_argspec_dispatcher_raises_instead_of_silent_fallback(lm):
+    """Regression: the old positional convention forwarded kwargs — usually
+    {} — as the data tree when a call had <=2 positional args.  The ArgSpec
+    path must raise a clear error naming the function instead."""
+    import repro.models.openpose as op_mod
+    from repro.core.library import make_openpose_library
+    from repro.models.params import init_params as ip
+    import jax.numpy as jnp
+
+    net = op_mod.OpenPoseLite()
+    params = ip(op_mod.op_param_specs(net), jax.random.PRNGKey(2),
+                jnp.float32)
+    ex = DestinationExecutor({"openpose": make_openpose_library(net)},
+                             name="op")
+    with avec.connect([ex]) as client:
+        sess = client.session(net, params, "openpose")
+        frames = op_mod.make_frames(1, 32, 32)
+        with client.intercept(op_mod, {
+                "op_forward": ("forward", ArgSpec(position=2))}, sess):
+            # the intended positional form works…
+            out = op_mod.op_forward(net, params,
+                                    {"frames": np.asarray(frames)})
+            assert "beliefs" in out
+            # …and the ambiguous two-arg form raises loudly (it used to
+            # silently send {} as the data tree)
+            with pytest.raises(ArgExtractionError, match="op_forward"):
+                op_mod.op_forward(net, params)
+
+
+def test_argspec_keyword_and_custom_extraction():
+    spec_kw = ArgSpec(keywords=("tokens",))
+    assert spec_kw("f", (), {"tokens": 1, "junk": 2}) == {"tokens": 1}
+    with pytest.raises(ArgExtractionError, match="missing keyword"):
+        spec_kw("f", (), {"junk": 2})
+    spec_ex = ArgSpec(extract=lambda a, k: {"x": a[0]})
+    assert spec_ex("f", (7,), {}) == {"x": 7}
+    with pytest.raises(ArgExtractionError, match="empty"):
+        ArgSpec()("f", (1, 2, 3), {})
+
+
+def test_legacy_dispatcher_deprecated_and_no_longer_silent(lm):
+    """make_dispatcher still works for 3+-positional-arg callers but warns,
+    and the formerly-silent <=2-args-no-kwargs case now raises."""
+    cfg, params, lib = lm
+    ex = DestinationExecutor({"lm": lib}, name="legacy")
+    from repro.core import AvecSession
+    sess = AvecSession(cfg, params, HostRuntime(DirectChannel(ex)), "lm")
+    with pytest.warns(DeprecationWarning, match="ArgSpec"):
+        disp = sess.make_dispatcher({"fn": "score"})
+    with pytest.raises(ArgExtractionError, match="positional convention"):
+        disp("fn", lambda *a, **k: None, "cfg", "params")  # 2 args, no kwargs
