@@ -261,6 +261,101 @@ def backpressure_probe(frames: int = 6, frame_floats: int = 128 * 1024,
     }
 
 
+def tenant_fairness_probe(weight_a: float = 3.0, weight_b: float = 1.0,
+                          threads_per_tenant: int = 6,
+                          warmup_s: float = 0.4, measure_s: float = 1.5,
+                          compute_s: float = 0.003,
+                          max_coalesce: int = 4) -> dict:
+    """Contended two-tenant fair-share probe (the CI fairness gate).
+
+    Two tenants with identical closed-loop offered load (same thread count,
+    same requests) hammer ONE coalescing destination whose drain weights are
+    pinned ``weight_a:weight_b`` server-side.  Every dispatch costs a fixed
+    ``compute_s`` regardless of batch size, so drain *slots* are the scarce
+    resource and the weighted deficit-round-robin drain is what divides
+    them.  A FIFO drain would split completions ~50/50 (equal offered load);
+    the weighted drain must land each tenant's share within ±20% of its
+    weight share, and the LOW-weight tenant's p95 latency must stay bounded
+    (no starvation) — both recorded for BENCH_dataplane.json and asserted
+    by CI's smoke-bench step."""
+    import threading
+
+    from repro.core.executor import DestinationExecutor, HostRuntime
+    from repro.core.transport import DirectChannel
+
+    def work(params, state, args):
+        time.sleep(compute_s)
+        return {"y": np.asarray(args["x"]) + 1.0}
+
+    ex = DestinationExecutor(
+        {"tiny": {"work": work}}, coalesce=True, coalesce_window_s=0.0,
+        max_coalesce=max_coalesce,
+        tenant_weights={"a": weight_a, "b": weight_b})
+    HostRuntime(DirectChannel(ex)).put_model(
+        "fp", "tiny", {"w": np.zeros(1, np.float32)})
+    stop = threading.Event()
+    lat: dict[str, list] = {"a": [], "b": []}
+    lat_lock = threading.Lock()
+    t_measure = [0.0]
+
+    def loop(tenant: str) -> None:
+        rt = HostRuntime(DirectChannel(ex))
+        x = {"x": np.zeros((1, 2), np.float32)}
+        while not stop.is_set():
+            t0 = time.perf_counter()
+            rt.run("fp", "work", x, batchable=True, tenant=tenant)
+            if t0 >= t_measure[0] > 0:      # completed inside the window
+                with lat_lock:
+                    lat[tenant].append(time.perf_counter() - t0)
+
+    threads = [threading.Thread(target=loop, args=(t,))
+               for t in ("a", "b") for _ in range(threads_per_tenant)]
+    [t.start() for t in threads]
+    time.sleep(warmup_s)
+    t_measure[0] = time.perf_counter()
+    before = {t: s.get("drained", 0) for t, s in ex.tenant_stats.items()}
+    time.sleep(measure_s)
+    after = {t: s.get("drained", 0) for t, s in ex.tenant_stats.items()}
+    stop.set()
+    [t.join(timeout=10) for t in threads]
+    stats = ex.tenant_stats
+    ex.shutdown()
+
+    drained = {t: after.get(t, 0) - before.get(t, 0) for t in ("a", "b")}
+    total = max(drained["a"] + drained["b"], 1)
+    share_a = drained["a"] / total
+    expected_share_a = weight_a / (weight_a + weight_b)
+    p95_bound = 100.0 * compute_s       # ~10x the expected steady-state p95
+    if lat["b"]:
+        b_lat = sorted(lat["b"])
+        b_p95 = b_lat[min(int(0.95 * len(b_lat)), len(b_lat) - 1)]
+        b_mean = float(np.mean(b_lat))
+    else:
+        # total starvation: zero completions must read as the WORST p95,
+        # not an empty-list 0.0 that would pass the bound
+        b_p95 = b_mean = float(measure_s)
+    return {
+        "weights": {"a": weight_a, "b": weight_b},
+        "threads_per_tenant": threads_per_tenant,
+        "measure_s": measure_s,
+        "dispatch_compute_s": compute_s,
+        "drained": drained,
+        "share_a": share_a,
+        "share_b": 1.0 - share_a,
+        "expected_share_a": expected_share_a,
+        "share_tolerance": 0.2,
+        "within_tolerance":
+            abs(share_a - expected_share_a) <= 0.2 * expected_share_a,
+        "b_completed": len(lat["b"]),
+        "b_mean_s": b_mean,
+        "b_p95_s": float(b_p95),
+        "p95_bound_s": p95_bound,
+        "b_p95_bounded": b_p95 < p95_bound,
+        "tenant_stats": {t: {k: v for k, v in s.items()}
+                         for t, s in stats.items()},
+    }
+
+
 def _coalesce_walls(clients: int = 8, reps: int = 4) -> tuple[float, float, dict]:
     """(uncoalesced_wall_s, coalesced_wall_s, stats) for N concurrent clients
     hitting one destination with batchable matmul requests."""
@@ -323,6 +418,7 @@ def dataplane_report(frames: int = 8, in_flight: int = 4) -> dict:
     t_sync, t_pipe, pipe_stats = _openpose_offload_walls(frames, in_flight)
     bp = backpressure_probe()
     t_plain, t_coal, stats = _coalesce_walls()
+    fairness = tenant_fairness_probe()
     return {
         "serialize_raw_512x512": {
             "payload_bytes": nb,
@@ -344,6 +440,7 @@ def dataplane_report(frames: int = 8, in_flight: int = 4) -> dict:
             "compute_ema_s": pipe_stats["compute_ema_s"],
         },
         "backpressure_small_sockbuf": bp,
+        "tenant_fairness_2way": fairness,
         "coalesced_dispatch": {
             "clients": 8, "reps": 4,
             "uncoalesced_wall_s": t_plain,

@@ -1,7 +1,8 @@
 """Benchmark harness: one section per paper table/figure + framework micro
 benches + the roofline summary.  Prints ``name,us_per_call,derived`` CSV and
 writes ``BENCH_dataplane.json`` (zero-copy serialize throughput vs the seed
-path, pipelined-vs-sync offload walls, coalesced dispatch walls).
+path, pipelined-vs-sync offload walls, coalesced dispatch walls, and the
+contended two-tenant fairness probe CI gates on).
 
 ``--smoke`` runs only the fast data-plane subset (CI's smoke bench);
 ``--no-json`` skips the JSON artifact.
@@ -95,6 +96,17 @@ def main() -> None:
                          f"{bp['frames']}x{bp['frame_bytes']}B frames thru "
                          f"{bp['socket_buffer_bytes']}B sockbufs in "
                          f"{bp['wall_s']:.2f}s (deadlock-free)"))
+            tf = report["tenant_fairness_2way"]
+            rows.append(("dataplane/tenant_fairness_share_a",
+                         tf["share_a"],
+                         f"target {tf['expected_share_a']:.2f} ±20% "
+                         f"({tf['weights']['a']:.0f}:"
+                         f"{tf['weights']['b']:.0f} weights, "
+                         f"drained {tf['drained']})"))
+            rows.append(("dataplane/tenant_fairness_b_p95_ms",
+                         tf["b_p95_s"] * 1e3,
+                         f"bound {tf['p95_bound_s'] * 1e3:.0f}ms "
+                         f"(low-weight tenant not starved)"))
         except Exception:  # noqa: BLE001
             traceback.print_exc()
             rows.append(("dataplane/ERROR", 0.0, "see traceback"))

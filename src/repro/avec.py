@@ -8,7 +8,8 @@ interception — are composable on purpose, but composing them by hand costs
 its own runtime tier.  This module is the facade that owns that wiring:
 
     client = avec.connect(["tcp://edge:9000", "tcp://cloud:9100"])
-    sess = client.session(cfg, params, "lm", tenant="acme")
+    sess = client.session(cfg, params, "lm", tenant="acme",
+                          qos=avec.QoS(weight=3.0))        # fair-share share
     out = sess.call("prefill", {"tokens": prompts})        # scheduler-routed
     outs = sess.map("score", {rid: args, ...})             # sharded fan-out
 
@@ -54,7 +55,8 @@ import numpy as np
 
 from repro.core.costmodel import Workload
 from repro.core.executor import (DestinationExecutor, HostRuntime,
-                                 PipelinedHostRuntime, RemoteError)
+                                 PipelinedHostRuntime, RemoteError,
+                                 TenantThrottled)
 from repro.core.interception import (ArgSpec, AvecSession,
                                      InterceptionLibrary)
 from repro.core.migration import MigrationManager, SessionShadow
@@ -70,12 +72,41 @@ from repro.serving.engine import (PipelinedOffloadFrontend,
 __all__ = [
     "connect", "AvecClient", "ClientSession", "ConnectPolicy", "Endpoint",
     "Capabilities", "HandshakeError", "ArgSpec", "PROTOCOL_VERSION",
+    "QoS", "TenantThrottled",
 ]
 
 
 class HandshakeError(ConnectionError):
     """Endpoint and client cannot interoperate (protocol version mismatch,
     unusable capability set).  Raised at connect time, loudly."""
+
+
+@dataclass(frozen=True)
+class QoS:
+    """Per-session quality-of-service declaration, carried in every ``run``
+    frame's metadata and honored by the destination's fair-share drain.
+
+    ``weight``   — relative drain share under contention (a weight-3 tenant
+                   drains ~3x a weight-1 tenant's requests; destinations may
+                   pin weights server-side, which wins).
+    ``priority`` — strict priority class: a higher class is always drained
+                   next (an already-dispatched batch is never preempted).
+                   Use sparingly — a saturated higher class starves lower
+                   ones by design."""
+    weight: float = 1.0
+    priority: int = 0
+
+    def as_meta(self) -> dict:
+        return {"weight": float(self.weight), "priority": int(self.priority)}
+
+
+def _qos_meta(qos) -> Optional[dict]:
+    """Normalize a QoS | dict | None into frame metadata."""
+    if qos is None:
+        return None
+    if isinstance(qos, QoS):
+        return qos.as_meta()
+    return dict(qos)
 
 
 # Spec assumed for a bare "tcp://host:port" target: capability-class numbers
@@ -95,6 +126,9 @@ class Capabilities:
     pipelining: bool
     coalesce: bool
     coalesce_stats: dict
+    fair_drain: bool = False
+    tenant_stats: dict = field(default_factory=dict)
+    tenant_limits: dict = field(default_factory=dict)
     raw: dict = field(default_factory=dict, compare=False)
 
     @staticmethod
@@ -108,6 +142,9 @@ class Capabilities:
             pipelining=bool(reply.get("pipelining", False)),
             coalesce=bool(reply.get("coalesce", False)),
             coalesce_stats=dict(reply.get("coalesce_stats", {})),
+            fair_drain=bool(reply.get("fair_drain", False)),
+            tenant_stats=dict(reply.get("tenant_stats", {})),
+            tenant_limits=dict(reply.get("tenant_limits", {})),
             raw=dict(reply))
 
 
@@ -309,6 +346,28 @@ class AvecClient:
                 return self._caps[name]
             return dict(self._caps)
 
+    def refresh_capabilities(self, name: str) -> Capabilities:
+        """Re-ping ``name`` and re-ingest its advertised capabilities —
+        including LIVE per-tenant stats (queue depth, drain share, throttle
+        counts) — into the scheduler.  Called automatically when a session
+        exhausts its throttle retries, so routing sees the saturation that
+        just bounced it."""
+        rt = self._runtime_for(name)
+        caps = Capabilities.from_ping(
+            rt.ping({"protocol_version": PROTOCOL_VERSION,
+                     "client": "repro.avec"}))
+        with self._lock:
+            self._caps[name] = caps
+        self.scheduler.record_capabilities(name, caps.raw)
+        return caps
+
+    def tenant_stats(self, name: Optional[str] = None) -> dict:
+        """The last-ingested per-tenant destination stats (one endpoint, or
+        all) — refresh with :meth:`refresh_capabilities`."""
+        if name is not None:
+            return self.scheduler.tenant_stats(name)
+        return {n: self.scheduler.tenant_stats(n) for n in self.destinations}
+
     def codec_for(self, name: str) -> str:
         with self._lock:
             return self._codecs[name]
@@ -331,18 +390,22 @@ class AvecClient:
 
     # -- sessions ----------------------------------------------------------
     def session(self, cfg: Any, params: Any, lib: str, *,
-                tenant: Optional[str] = None,
+                tenant: Optional[str] = None, qos=None,
                 workload: Optional[Workload] = None,
                 destination: Optional[str] = None,
                 name: str = "session") -> "ClientSession":
         """A tenant-scoped session whose destination the scheduler picks
-        (capability-fed cost model + live load), with transparent failover.
-        ``workload`` refines the scheduler's estimate; omitted, it is
-        derived from the parameter tree."""
+        (capability-fed cost model + live load + the calling tenant's own
+        saturation at each destination), with transparent failover.
+        ``qos`` (a :class:`QoS` or ``{"weight": .., "priority": ..}`` dict)
+        declares the session's fair-share weight and priority class,
+        carried in every run frame's metadata.  ``workload`` refines the
+        scheduler's estimate; omitted, it is derived from the parameter
+        tree."""
         w = workload or self._default_workload(lib, params)
-        dest = destination or self._pick_serving(w, lib)
+        dest = destination or self._pick_serving(w, lib, tenant)
         return ClientSession(self, cfg, params, lib, dest, tenant=tenant,
-                             workload=w, name=name)
+                             qos=_qos_meta(qos), workload=w, name=name)
 
     def serves(self, name: str, lib: str) -> bool:
         """Whether endpoint ``name`` advertised library ``lib`` in its
@@ -353,11 +416,14 @@ class AvecClient:
         libs = caps.libraries if caps is not None else {}
         return not libs or lib in libs
 
-    def _pick_serving(self, w: Workload, lib: str) -> str:
+    def _pick_serving(self, w: Workload, lib: str,
+                      tenant: Optional[str] = None) -> str:
         """Scheduler pick restricted to destinations that advertise ``lib``
         — health and memory alone must not route a session onto an
-        executor that cannot serve its library."""
-        for va in self.scheduler.candidates(w):
+        executor that cannot serve its library.  ``tenant`` lets the
+        scheduler penalize destinations where that tenant is already
+        saturated (advertised tenant_stats)."""
+        for va in self.scheduler.candidates(w, tenant=tenant):
             if self.serves(va.name, lib):
                 return va.name
         raise NoDestinationError(
@@ -389,6 +455,8 @@ class AvecClient:
                           sess.lib, profiler=sess.profiler,
                           name=f"{sess.name}@{name}")
         sib.fp = sess.fp                # tenant scoping carries over
+        sib.tenant = sess.tenant        # ...as does the fair-share identity
+        sib.qos = sess.qos
         with self._lock:
             self._siblings[key] = sib
         return sib
@@ -438,11 +506,13 @@ class ClientSession(AvecSession):
 
     def __init__(self, client: AvecClient, cfg, params, lib: str,
                  destination: str, *, tenant: Optional[str],
+                 qos: Optional[dict] = None,
                  workload: Workload, name: str = "session") -> None:
         super().__init__(cfg, params, client._runtime_for(destination), lib,
                          name=name)
         self.client = client
         self.tenant = tenant
+        self.qos = qos
         self.workload = workload
         self.destination = destination
         if tenant is not None:
@@ -458,9 +528,21 @@ class ClientSession(AvecSession):
         """One profiled execution cycle, with transparent failover: if the
         destination died (confirmed by a failed ping), the session migrates
         to the next-best healthy destination — weights via send-once, state
-        from the host-side shadow — and the call is retried once."""
+        from the host-side shadow — and the call is retried once.
+
+        A :class:`TenantThrottled` that survives the runtime's jittered
+        retries is NOT failover (the node is alive — it is saying no to
+        this tenant specifically): the destination's live tenant stats are
+        re-ingested so the scheduler penalizes it for this tenant's future
+        routing, and the typed error surfaces to the caller."""
         try:
             out = self._tracked_call(fn, args)
+        except TenantThrottled:
+            try:
+                self.client.refresh_capabilities(self.destination)
+            except Exception:  # noqa: BLE001 — best-effort stats refresh
+                pass
+            raise
         except self._FAILOVER_EXC as e:
             if not self._recover_same_destination():
                 self._failover_or_raise(e)
@@ -571,7 +653,8 @@ class ClientSession(AvecSession):
         ``batchable`` defaults to each peer's advertised coalescing
         support."""
         limit = max_shards or self.client.policy.max_shards
-        cands = [va for va in self.client.scheduler.candidates(self.workload)
+        cands = [va for va in self.client.scheduler.candidates(
+                     self.workload, tenant=self.tenant)
                  if self.client.serves(va.name, self.lib)]
         names = [va.name for va in cands][:limit] or [self.destination]
         frontends = []
@@ -582,7 +665,8 @@ class ClientSession(AvecSession):
             caps = self.client.capabilities(nm)
             b = batchable if batchable is not None else caps.coalesce
             frontends.append(PipelinedOffloadFrontend(
-                sib.runtime, sib.fp, fn, batchable=b))
+                sib.runtime, sib.fp, fn, batchable=b,
+                tenant=self.tenant, qos=self.qos))
         sharded = ShardedOffloadFrontend(frontends, names=names)
         # hold the registry's live-load counters for the round-robin
         # assignment (shard i serves every len(names)-th request) so

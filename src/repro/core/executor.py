@@ -28,6 +28,29 @@ dominating the cycle; these are the levers that shrink it):
   device call (leaves concatenated on axis 0), amortizing tree traversal and
   dispatch overhead across clients.  Stateful ops (decode) must not set
   ``batchable``.
+* **Per-tenant QoS drain** (multi-tenant fair-share serving): the coalescer
+  keeps one sub-queue per tenant (``meta["tenant"]``) and drains them by
+  weighted deficit-round-robin — weights and priority classes declared in
+  the frame metadata (``meta["qos"] = {"weight": w, "priority": p}``, see
+  ``repro.avec.QoS``) or pinned server-side via ``tenant_weights``.
+  Coalescing still micro-batches within a tenant's (fp, fn, signature) key,
+  but one tenant's batch train can no longer starve another's: under
+  contention each tenant's drain share converges to its weight share, and a
+  higher priority class is always served next (an already-dispatched batch
+  is never preempted).  A lone active tenant gets full ``max_coalesce``
+  batches — fairness costs nothing when there is no contention.
+* **Admission control** (``tenant_max_inflight`` / ``tenant_max_bytes``):
+  a tenant at its in-flight or bytes cap gets a typed ``TenantThrottled``
+  response (``{"ok": False, "throttled": True, "retry_after_s": ...}``)
+  instead of a queue slot; host runtimes retry with jittered backoff
+  (``throttle_retries``), so a saturated tenant backs off instead of
+  ballooning the destination's queues.  The first request of an idle tenant
+  is always admitted (a single request larger than the bytes cap must not
+  starve forever).
+* **Per-tenant stats in the handshake**: the ping reply carries
+  ``tenant_stats`` (queue depth, drain share, throttle count, in-flight)
+  and ``tenant_limits`` so ``DeviceAwareScheduler`` can penalize
+  destinations where the *calling* tenant is already saturated.
 * **Pipelined host** (``PipelinedHostRuntime``): keeps up to N request
   frames in flight on one channel, matching responses by frame id — frame
   k+1 serializes and transmits while frame k computes at the destination
@@ -56,15 +79,18 @@ Runtime stats (``PipelinedHostRuntime.stats()``) — exported to
   sends_resumed                 frames that needed >1 non-blocking attempt
   recv_retries                  clean channel recv timeouts retried inside
                                 the pump (caller deadline not yet expired)
+  throttle_retried              TenantThrottled admission responses retried
+                                with jittered backoff
   requests_completed            responses dispatched to futures
   wire_ema_s / compute_ema_s    the smoothed comm/compute estimates driving
                                 the window controller
 """
 from __future__ import annotations
 
+import collections
 import itertools
 import math
-import queue
+import random
 import threading
 import time
 import traceback
@@ -78,12 +104,42 @@ from repro.core.cache import ModelCache
 from repro.core.serialization import (PROTOCOL_VERSION, SUPPORTED_CODECS,
                                       Frame, frame_preamble_ok,
                                       frame_request_id, pack_message,
-                                      unpack_message)
+                                      tree_wire_bytes, unpack_message)
 from repro.core.transport import Channel, ChannelClosed, ProtocolError
 
 
 class RemoteError(RuntimeError):
     pass
+
+
+class TenantThrottled(RemoteError):
+    """Typed destination backpressure: the calling tenant is at its
+    admission cap (in-flight requests or bytes).  Carries the destination's
+    ``retry_after_s`` hint; host runtimes retry with jittered backoff up to
+    ``throttle_retries`` before surfacing the error."""
+
+    def __init__(self, msg: str, tenant: str = "default",
+                 retry_after_s: float = 0.01) -> None:
+        super().__init__(msg)
+        self.tenant = tenant
+        self.retry_after_s = retry_after_s
+
+
+def _remote_exception(rmeta: dict) -> RemoteError:
+    """The typed host-side exception for a ``{"ok": False}`` response."""
+    msg = rmeta.get("error", "unknown remote error")
+    if rmeta.get("throttled"):
+        return TenantThrottled(msg, rmeta.get("tenant", DEFAULT_TENANT),
+                               float(rmeta.get("retry_after_s", 0.01)))
+    return RemoteError(msg)
+
+
+def _throttle_backoff(attempt: int, retry_after_s: float) -> float:
+    """Jittered exponential backoff for TenantThrottled retries.  Full
+    jitter (0.5x-1.5x) decorrelates tenants that were throttled together —
+    synchronized retries would just collide at the admission gate again."""
+    base = min(max(retry_after_s, 1e-3) * (2 ** attempt), 0.5)
+    return base * random.uniform(0.5, 1.5)
 
 
 # ---------------------------------------------------------------------------
@@ -99,22 +155,181 @@ def _batch_signature(tree: Any) -> tuple:
     return (str(treedef), sig)
 
 
+DEFAULT_TENANT = "default"
+
+#: weights are clamped here so a ~zero declared weight cannot make the DRR
+#: rotation spin unboundedly before its tenant accrues one request's deficit
+_MIN_WEIGHT = 0.01
+
+
+class _TenantQueue:
+    """One tenant's pending sub-queue + its deficit-round-robin state."""
+
+    __slots__ = ("name", "items", "deficit", "weight", "priority", "active",
+                 "enqueued", "drained", "batches")
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+        self.items: collections.deque = collections.deque()
+        self.deficit = 0.0
+        self.weight = 1.0           # empty/undeclared qos defaults
+        self.priority = 0
+        self.active = False
+        self.enqueued = 0
+        self.drained = 0
+        self.batches = 0
+
+
+class _QoSQueues:
+    """Per-tenant sub-queues drained by weighted deficit-round-robin, with
+    strict priority classes.
+
+    NOT thread-safe: the coalescer calls every method under its condition
+    variable.  Items are ``(key, meta, tree, future)`` tuples; a *batch* is
+    a run of consecutive same-key items from ONE tenant's queue (coalescing
+    never mixes tenants into a stacked dispatch).
+
+    Scheduling: the highest priority class with pending work is served
+    first.  Within a class, tenants are visited round-robin; each visit
+    adds ``weight * (max_batch / max_active_weight)`` to the tenant's
+    deficit, and the tenant may drain up to ``floor(deficit)`` requests
+    (capped at ``max_batch``) — so the heaviest tenant fills whole batches
+    while drain *shares* converge to the weight ratio.  A lone active
+    tenant bypasses the deficit entirely (full batches, zero fairness tax).
+    """
+
+    def __init__(self, tenant_weights: dict | None = None) -> None:
+        self._tenant_weights = dict(tenant_weights or {})   # server pins
+        self._tenants: dict[str, _TenantQueue] = {}
+        self._rotation: dict[int, collections.deque] = {}   # priority -> RR
+        self.pending = 0
+
+    # ------------------------------------------------------------------
+    def push(self, tenant: str, qos: dict | None, item: tuple) -> None:
+        tq = self._tenants.get(tenant)
+        if tq is None:
+            tq = self._tenants[tenant] = _TenantQueue(tenant)
+        qos = qos or {}
+        declared = self._tenant_weights.get(tenant, qos.get("weight", None))
+        if declared is not None:
+            tq.weight = max(float(declared), _MIN_WEIGHT)
+        if not tq.active:           # priority moves only between activations
+            tq.priority = int(qos.get("priority", tq.priority))
+            tq.active = True
+            tq.deficit = 0.0
+            self._rotation.setdefault(tq.priority,
+                                      collections.deque()).append(tq)
+        tq.items.append(item)
+        tq.enqueued += 1
+        self.pending += 1
+
+    def _deactivate(self, tq: _TenantQueue) -> None:
+        tq.active = False
+        tq.deficit = 0.0
+        rot = self._rotation.get(tq.priority)
+        if rot is not None:
+            try:
+                rot.remove(tq)
+            except ValueError:
+                pass
+            if not rot:
+                del self._rotation[tq.priority]
+
+    # ------------------------------------------------------------------
+    def next_batch(self, max_batch: int) -> tuple[_TenantQueue, tuple, list]:
+        """Pick the next tenant (priority, then DRR) and take its head
+        batch.  Caller guarantees ``pending > 0``."""
+        prio = max(self._rotation)
+        rot = self._rotation[prio]
+        if self.pending == len(rot[0].items):
+            # the sole ACTIVE tenant holds everything pending (inactive
+            # tenants linger in _tenants for stats but hold no items):
+            # no contention, fairness is moot, serve full batches
+            tq = rot[0]
+            tq.deficit = 0.0
+            budget = max_batch
+        else:
+            max_w = max(t.weight for t in rot)
+            quantum = max_batch / max_w
+            while True:
+                tq = rot[0]
+                rot.rotate(-1)
+                # cap stops unbounded accrual when a tenant's queue head is
+                # fragmented across keys and it can't spend its deficit
+                tq.deficit = min(tq.deficit + tq.weight * quantum,
+                                 2.0 * max_batch)
+                if tq.deficit >= 1.0 and tq.items:
+                    break
+            budget = min(int(tq.deficit), max_batch)
+        key = tq.items[0][0]
+        batch = self.take_matching(tq, key, budget)
+        if batch:
+            # one dispatched batch per next_batch call — window-fill grows
+            # THIS batch via further take_matching calls, so the per-tenant
+            # batch counter (the handshake's amortization signal) must tick
+            # here, not per take
+            tq.batches += 1
+        return tq, key, batch
+
+    def take_matching(self, tq: _TenantQueue, key: tuple, n: int) -> list:
+        """Consume up to ``n`` consecutive head items of ``tq`` matching
+        ``key`` (an incompatible head flushes the batch, as before).  Does
+        NOT count a batch — callers growing an existing batch reuse this."""
+        batch = []
+        while len(batch) < n and tq.items and tq.items[0][0] == key:
+            batch.append(tq.items.popleft())
+        tq.deficit = max(tq.deficit - len(batch), 0.0)
+        tq.drained += len(batch)
+        self.pending -= len(batch)
+        if tq.active and not tq.items:
+            self._deactivate(tq)
+        return batch
+
+    def drain_all(self) -> list:
+        """Remove and return every pending item (shutdown)."""
+        items = []
+        for tq in self._tenants.values():
+            items.extend(tq.items)
+            tq.items.clear()
+            if tq.active:
+                self._deactivate(tq)
+        self.pending = 0
+        return items
+
+    def stats(self) -> dict:
+        total = sum(t.drained for t in self._tenants.values())
+        return {name: {
+            "queue_depth": len(tq.items),
+            "enqueued": tq.enqueued,
+            "drained": tq.drained,
+            "batches": tq.batches,
+            "drain_share": (tq.drained / total) if total else 0.0,
+            "weight": tq.weight,
+            "priority": tq.priority,
+        } for name, tq in self._tenants.items()}
+
+
 class _Coalescer:
-    """Micro-batches compatible ``run`` requests into one stacked dispatch.
+    """Micro-batches compatible ``run`` requests into one stacked dispatch,
+    draining per-tenant sub-queues fairly (see :class:`_QoSQueues`).
 
     ``submit`` blocks the calling (per-connection) thread on a future; a
-    single worker drains the queue, groups consecutive compatible requests
-    within ``window_s``, concatenates their leaves along axis 0, runs the
-    library function once, and splits outputs back per request."""
+    single worker picks the next tenant by priority + weighted DRR, takes
+    up to its deficit's worth of consecutive compatible requests,
+    concatenates their leaves along axis 0, runs the library function once,
+    and splits outputs back per request.  The coalescing window (waiting up
+    to ``window_s`` for more compatible arrivals) only opens when nothing
+    else is pending anywhere — under contention, fairness beats batching."""
 
     def __init__(self, execute: Callable, window_s: float = 0.002,
-                 max_batch: int = 8) -> None:
+                 max_batch: int = 8,
+                 tenant_weights: dict | None = None) -> None:
         self._execute = execute     # (key, metas, trees) -> list[(meta, tree)]
         self.window_s = window_s
         self.max_batch = max_batch
-        self._q: queue.Queue = queue.Queue()
-        self._stop = threading.Event()
-        self._sublock = threading.Lock()
+        self._cv = threading.Condition()
+        self._q = _QoSQueues(tenant_weights)
+        self._stopped = False
         self.stats = {"batches": 0, "requests": 0, "max_batch": 0}
         self._worker = threading.Thread(target=self._loop, daemon=True)
         self._worker.start()
@@ -122,61 +337,58 @@ class _Coalescer:
     def submit(self, key: tuple, meta: dict, tree: Any) -> tuple[dict, Any]:
         fut: Future = Future()
         # check-stop and enqueue are atomic vs stop(): nothing can be put
-        # after the stop flag is set, so the post-join drain is exhaustive
-        with self._sublock:
-            if self._stop.is_set():
+        # after the stop flag is set, so the post-stop drain is exhaustive
+        with self._cv:
+            if self._stopped:
                 raise ChannelClosed("coalescer stopped")
-            self._q.put((key, meta, tree, fut))
+            tenant = meta.get("tenant") or DEFAULT_TENANT
+            self._q.push(tenant, meta.get("qos"), (key, meta, tree, fut))
+            self._cv.notify_all()
         return fut.result()
 
     def stop(self) -> None:
-        with self._sublock:
-            self._stop.set()
-            self._q.put(None)
+        with self._cv:
+            self._stopped = True
+            self._cv.notify_all()
         self._worker.join(timeout=1.0)
         self._drain_failed()
 
     def _drain_failed(self) -> None:
-        while True:
-            try:
-                left = self._q.get_nowait()
-            except queue.Empty:
-                return
-            if left is not None:
-                left[3].set_exception(ChannelClosed("coalescer stopped"))
+        with self._cv:
+            left = self._q.drain_all()
+        for item in left:
+            if not item[3].done():
+                item[3].set_exception(ChannelClosed("coalescer stopped"))
+
+    @property
+    def tenant_stats(self) -> dict:
+        with self._cv:
+            return self._q.stats()
 
     # ------------------------------------------------------------------
     def _loop(self) -> None:
-        carry = None
-        while not self._stop.is_set():
-            item = carry if carry is not None else self._q.get()
-            carry = None
-            if item is None:
-                break
-            batch = [item]
-            deadline = time.monotonic() + self.window_s
-            while len(batch) < self.max_batch:
-                remaining = deadline - time.monotonic()
-                if remaining <= 0:
+        while True:
+            with self._cv:
+                while not self._stopped and self._q.pending == 0:
+                    self._cv.wait()
+                if self._stopped:
                     break
-                try:
-                    nxt = self._q.get(timeout=remaining)
-                except queue.Empty:
-                    break
-                if nxt is None:
-                    carry = None
-                    self._stop.set()
-                    break
-                if nxt[0] == item[0]:
-                    batch.append(nxt)
-                else:                 # incompatible: flush, then start fresh
-                    carry = nxt
-                    break
+                tq, key, batch = self._q.next_batch(self.max_batch)
+                if len(batch) < self.max_batch:
+                    # window-fill: wait for more compatible arrivals, but
+                    # ONLY while nothing else (any tenant) is pending —
+                    # holding a batch open under contention would tax every
+                    # other tenant's latency for this tenant's throughput
+                    deadline = time.monotonic() + self.window_s
+                    while (len(batch) < self.max_batch
+                           and not self._stopped and self._q.pending == 0):
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0:
+                            break
+                        self._cv.wait(timeout=remaining)
+                        batch += self._q.take_matching(
+                            tq, key, self.max_batch - len(batch))
             self._dispatch(batch)
-        # fail the carried item and drain the queue so callers blocked in
-        # submit() don't hang on shutdown
-        if carry is not None:
-            carry[3].set_exception(ChannelClosed("coalescer stopped"))
         self._drain_failed()
 
     def _dispatch(self, batch: list) -> None:
@@ -204,26 +416,99 @@ class DestinationExecutor:
     slot carries serving caches so sessions can be snapshot/migrated.
 
     With ``coalesce=True``, concurrent batchable ``run`` ops micro-batch into
-    one stacked dispatch (see module docstring)."""
+    one stacked dispatch, drained fairly across tenants (see module
+    docstring).  ``tenant_weights`` pins per-tenant drain weights
+    server-side (overriding frame-declared qos); ``tenant_max_inflight`` /
+    ``tenant_max_bytes`` cap one tenant's concurrently admitted ``run``
+    requests / payload bytes (0 = unlimited) — beyond the cap the tenant
+    gets a typed ``TenantThrottled`` response instead of a queue slot."""
 
     def __init__(self, libraries: dict[str, dict[str, Callable]],
                  cache: ModelCache | None = None, name: str = "dest", *,
                  coalesce: bool = False, coalesce_window_s: float = 0.002,
-                 max_coalesce: int = 8) -> None:
+                 max_coalesce: int = 8,
+                 tenant_weights: dict | None = None,
+                 tenant_max_inflight: int = 0,
+                 tenant_max_bytes: float = 0.0) -> None:
         self.libraries = libraries
         self.cache = cache or ModelCache()
         self.name = name
         self.fail = False          # fault-injection switch (tests/migration)
+        self.tenant_max_inflight = int(tenant_max_inflight)
+        self.tenant_max_bytes = float(tenant_max_bytes)
+        self._adm_lock = threading.Lock()
+        self._adm: dict[str, dict] = {}     # tenant -> admission counters
         self._coalescer = (_Coalescer(self._run_batch, coalesce_window_s,
-                                      max_coalesce) if coalesce else None)
+                                      max_coalesce, tenant_weights)
+                           if coalesce else None)
 
     @property
     def coalesce_stats(self) -> dict:
         return dict(self._coalescer.stats) if self._coalescer else {}
 
+    @property
+    def tenant_stats(self) -> dict:
+        """Live per-tenant serving stats: admission counters (in-flight,
+        bytes in flight, throttle/served counts) merged with the coalescer's
+        drain stats (queue depth, drain share, weight) — the payload the
+        ping handshake advertises to host schedulers."""
+        drain = self._coalescer.tenant_stats if self._coalescer else {}
+        with self._adm_lock:
+            adm = {t: dict(c) for t, c in self._adm.items()}
+        out: dict[str, dict] = {}
+        served_total = sum(c["served"] for c in adm.values()) or 0
+        for tenant in set(adm) | set(drain):
+            row = dict(drain.get(tenant, {}))
+            row.update(adm.get(tenant, {}))
+            if "drain_share" not in row and served_total:
+                row["drain_share"] = row.get("served", 0) / served_total
+            out[tenant] = row
+        return out
+
     def shutdown(self) -> None:
         if self._coalescer:
             self._coalescer.stop()
+
+    # -- per-tenant admission control ----------------------------------
+    def _adm_entry(self, tenant: str) -> dict:
+        st = self._adm.get(tenant)
+        if st is None:
+            st = self._adm[tenant] = {"inflight": 0, "bytes_inflight": 0,
+                                      "throttled": 0, "served": 0}
+        return st
+
+    def _admit(self, tenant: str, nbytes: int) -> tuple[bool, float]:
+        """-> (admitted, retry_after_s).  The first request of an idle
+        tenant is always admitted, so a cap smaller than one request cannot
+        starve it forever."""
+        with self._adm_lock:
+            st = self._adm_entry(tenant)
+            over_inflight = (self.tenant_max_inflight
+                             and st["inflight"] >= self.tenant_max_inflight)
+            over_bytes = (self.tenant_max_bytes
+                          and st["bytes_inflight"] + nbytes
+                          > self.tenant_max_bytes)
+            if st["inflight"] and (over_inflight or over_bytes):
+                st["throttled"] += 1
+                depth = st["inflight"]
+                if self._coalescer:
+                    depth += self._coalescer.tenant_stats.get(
+                        tenant, {}).get("queue_depth", 0)
+                return False, min(0.25, 0.005 * (depth + 1))
+            st["inflight"] += 1
+            st["bytes_inflight"] += nbytes
+            return True, 0.0
+
+    def _release(self, tenant: str, nbytes: int, served: bool) -> None:
+        """``served`` only counts SUCCESSFUL completions — the scheduler's
+        tenant-saturation term reads it as real service, so an erroring
+        tenant must not look well-served."""
+        with self._adm_lock:
+            st = self._adm_entry(tenant)
+            st["inflight"] = max(st["inflight"] - 1, 0)
+            st["bytes_inflight"] = max(st["bytes_inflight"] - nbytes, 0)
+            if served:
+                st["served"] += 1
 
     # ------------------------------------------------------------------
     def handle(self, raw) -> Frame:
@@ -277,6 +562,13 @@ class DestinationExecutor:
             "pipelining": True,          # responses echo request ids
             "coalesce": self._coalescer is not None,
             "coalesce_stats": self.coalesce_stats,
+            # fair-share serving: per-tenant live stats + admission caps, so
+            # host schedulers can penalize destinations where the calling
+            # tenant is already saturated
+            "fair_drain": self._coalescer is not None,
+            "tenant_stats": self.tenant_stats,
+            "tenant_limits": {"max_inflight": self.tenant_max_inflight,
+                              "max_bytes": self.tenant_max_bytes},
         }, None, "raw"
 
     def _op_has_model(self, meta, tree):
@@ -294,12 +586,28 @@ class DestinationExecutor:
 
     def _op_run(self, meta, tree):
         codec = meta.get("codec", "raw")
-        if self._coalescer is not None and meta.get("batchable"):
-            key = (meta["fp"], meta["fn"], codec, _batch_signature(tree))
-            rmeta, out_np = self._coalescer.submit(key, meta, tree)
+        tenant = meta.get("tenant") or DEFAULT_TENANT
+        nbytes = tree_wire_bytes(tree) if tree is not None else 0
+        admitted, retry_after = self._admit(tenant, nbytes)
+        if not admitted:
+            return {"ok": False, "throttled": True, "tenant": tenant,
+                    "retry_after_s": retry_after,
+                    "error": f"tenant {tenant!r} throttled at {self.name}: "
+                             f"admission cap reached (max_inflight="
+                             f"{self.tenant_max_inflight}, max_bytes="
+                             f"{self.tenant_max_bytes:.0f}); retry after "
+                             f"~{retry_after * 1e3:.0f}ms"}, None, "raw"
+        done_ok = False
+        try:
+            if self._coalescer is not None and meta.get("batchable"):
+                key = (meta["fp"], meta["fn"], codec, _batch_signature(tree))
+                rmeta, out_np = self._coalescer.submit(key, meta, tree)
+            else:
+                rmeta, out_np = self._run_one(meta, tree)
+            done_ok = True
             return rmeta, out_np, codec
-        rmeta, out_np = self._run_one(meta, tree)
-        return rmeta, out_np, codec
+        finally:
+            self._release(tenant, nbytes, served=done_ok)
 
     def _op_drop_session(self, meta, tree):
         self.cache.drop(meta["fp"])
@@ -377,14 +685,18 @@ class HostRuntime:
 
     ``copy_results=False`` (default) hands back zero-copy views over the
     received frame for raw-codec leaves; set it when callers mutate results
-    in place."""
+    in place.  ``throttle_retries`` bounds the jittered retries of a
+    :class:`TenantThrottled` admission response inside :meth:`run`."""
 
     def __init__(self, channel: Channel, codec: str = "raw",
-                 timeout: float = 120.0, copy_results: bool = False) -> None:
+                 timeout: float = 120.0, copy_results: bool = False,
+                 throttle_retries: int = 4) -> None:
         self.channel = channel
         self.codec = codec
         self.timeout = timeout
         self.copy_results = copy_results
+        self.throttle_retries = throttle_retries
+        self.throttle_retried = 0   # TenantThrottled responses retried
         self.bytes_sent = 0
         self.bytes_received = 0
         self.last_compute_s = 0.0
@@ -397,7 +709,7 @@ class HostRuntime:
         self.bytes_received += len(resp)
         rmeta, rtree = unpack_message(resp, copy=self.copy_results)
         if not rmeta.get("ok", False):
-            raise RemoteError(rmeta.get("error", "unknown remote error"))
+            raise _remote_exception(rmeta)
         return rmeta, rtree
 
     def ping(self, client_info: dict | None = None) -> dict:
@@ -415,13 +727,36 @@ class HostRuntime:
                              "extra": extra or {}}, params_np)
         return meta["transfer_s"]
 
-    def run(self, fp: str, fn: str, args, batchable: bool = False) -> Any:
+    def _run_meta(self, fp: str, fn: str, batchable: bool,
+                  tenant: str | None, qos: dict | None) -> dict:
+        meta = {"op": "run", "fp": fp, "fn": fn, "codec": self.codec,
+                "batchable": batchable}
+        if tenant is not None:
+            meta["tenant"] = tenant
+        if qos:
+            meta["qos"] = dict(qos)
+        return meta
+
+    def run(self, fp: str, fn: str, args, batchable: bool = False, *,
+            tenant: str | None = None, qos: dict | None = None) -> Any:
+        """One execution cycle.  ``tenant``/``qos`` ride in the frame
+        metadata (fair-share drain + admission at the destination); a
+        :class:`TenantThrottled` response is retried with jittered backoff
+        up to ``throttle_retries`` times before surfacing."""
         args_np = jax.tree_util.tree_map(np.asarray, args)
-        meta, out = self._rpc({"op": "run", "fp": fp, "fn": fn,
-                               "codec": self.codec, "batchable": batchable},
-                              args_np, codec=self.codec)
-        self.last_compute_s = meta["compute_s"]
-        return out
+        rmeta = self._run_meta(fp, fn, batchable, tenant, qos)
+        attempt = 0
+        while True:
+            try:
+                meta, out = self._rpc(rmeta, args_np, codec=self.codec)
+                self.last_compute_s = meta["compute_s"]
+                return out
+            except TenantThrottled as e:
+                if attempt >= self.throttle_retries:
+                    raise
+                self.throttle_retried += 1
+                time.sleep(_throttle_backoff(attempt, e.retry_after_s))
+                attempt += 1
 
     def snapshot(self, fp: str) -> Any:
         return self._rpc({"op": "snapshot", "fp": fp})[1]
@@ -529,8 +864,10 @@ class PipelinedHostRuntime(HostRuntime):
 
     def __init__(self, channel: Channel, codec: str = "raw",
                  timeout: float = 120.0, copy_results: bool = False,
-                 max_in_flight: int = 4, adaptive_window: bool = True) -> None:
-        super().__init__(channel, codec, timeout, copy_results)
+                 max_in_flight: int = 4, adaptive_window: bool = True,
+                 throttle_retries: int = 4) -> None:
+        super().__init__(channel, codec, timeout, copy_results,
+                         throttle_retries=throttle_retries)
         self.max_in_flight = max_in_flight
         self.adaptive_window = adaptive_window
         self._window = _WindowController(max_in_flight)
@@ -801,8 +1138,7 @@ class PipelinedHostRuntime(HostRuntime):
             with self._cv:
                 self._window.observe(wire_s, compute_s)
         if not rmeta.get("ok", False):
-            fut.set_exception(
-                RemoteError(rmeta.get("error", "unknown remote error")))
+            fut.set_exception(_remote_exception(rmeta))
         else:
             fut.set_result((rmeta, rtree))
 
@@ -823,14 +1159,16 @@ class PipelinedHostRuntime(HostRuntime):
     def _rpc(self, meta: dict, tree=None, codec: str = "raw") -> tuple[dict, Any]:
         return self.wait(self.submit(meta, tree, codec=codec))
 
-    def run_async(self, fp: str, fn: str, args,
-                  batchable: bool = False) -> Future:
+    def run_async(self, fp: str, fn: str, args, batchable: bool = False, *,
+                  tenant: str | None = None, qos: dict | None = None) -> Future:
         """Async ``run``: a Future resolving to (rmeta, output tree).
         Resolve it with :meth:`wait` (or ``.result()`` after another call on
-        this runtime has pumped the channel)."""
+        this runtime has pumped the channel).  One wire attempt — a
+        :class:`TenantThrottled` response surfaces on the future; the
+        synchronous :meth:`run` wrapper (and the serving frontends) own the
+        jittered retry loop."""
         args_np = jax.tree_util.tree_map(np.asarray, args)
-        inner = self.submit({"op": "run", "fp": fp, "fn": fn,
-                             "codec": self.codec, "batchable": batchable},
+        inner = self.submit(self._run_meta(fp, fn, batchable, tenant, qos),
                             args_np, codec=self.codec)
 
         def _record(f: Future) -> None:
@@ -839,8 +1177,21 @@ class PipelinedHostRuntime(HostRuntime):
         inner.add_done_callback(_record)
         return inner
 
-    def run(self, fp: str, fn: str, args, batchable: bool = False) -> Any:
-        return self.wait(self.run_async(fp, fn, args, batchable=batchable))[1]
+    def run(self, fp: str, fn: str, args, batchable: bool = False, *,
+            tenant: str | None = None, qos: dict | None = None) -> Any:
+        attempt = 0
+        while True:
+            try:
+                return self.wait(self.run_async(
+                    fp, fn, args, batchable=batchable,
+                    tenant=tenant, qos=qos))[1]
+            except TenantThrottled as e:
+                if attempt >= self.throttle_retries:
+                    raise
+                with self._cv:
+                    self.throttle_retried += 1
+                time.sleep(_throttle_backoff(attempt, e.retry_after_s))
+                attempt += 1
 
     def in_flight(self) -> int:
         with self._cv:
@@ -865,6 +1216,7 @@ class PipelinedHostRuntime(HostRuntime):
                 "send_stalls": self._send_stalls,
                 "sends_resumed": self._sends_resumed,
                 "recv_retries": self._recv_retries,
+                "throttle_retried": self.throttle_retried,
                 "requests_completed": self._requests_completed,
                 "wire_ema_s": self._window.wire_ema,
                 "compute_ema_s": self._window.compute_ema,

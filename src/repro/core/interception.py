@@ -127,6 +127,10 @@ class AvecSession:
     * ``call``        — one profiled execution cycle: serialize → send →
       destination compute → return → deserialize, recorded in the profiler's
       GPU/communication buckets.
+
+    ``tenant``/``qos`` (set by the facade's tenant-scoped sessions) ride in
+    every ``run`` frame's metadata, driving the destination's fair-share
+    drain and per-tenant admission control.
     """
 
     def __init__(self, cfg: Any, params: Any, runtime: HostRuntime,
@@ -140,6 +144,8 @@ class AvecSession:
         self.fp = model_fingerprint(cfg, params)
         self.profiler = profiler or AvecProfiler()
         self.model_transfer_s: Optional[float] = None
+        self.tenant: Optional[str] = None
+        self.qos: Optional[dict] = None
         self._ready = False
 
     # ------------------------------------------------------------------
@@ -162,7 +168,8 @@ class AvecSession:
         sent0 = self.runtime.bytes_sent
         recv0 = self.runtime.bytes_received
         t0 = time.perf_counter()
-        out = self.runtime.run(self.fp, fn, args)
+        out = self.runtime.run(self.fp, fn, args,
+                               tenant=self.tenant, qos=self.qos)
         wall = time.perf_counter() - t0
         compute = self.runtime.last_compute_s
         self.profiler.record_cycle(
@@ -187,7 +194,8 @@ class AvecSession:
             self.ensure_model()
         sent = tree_wire_bytes(args)
         t0 = time.perf_counter()
-        inner = self.runtime.run_async(self.fp, fn, args, batchable=batchable)
+        inner = self.runtime.run_async(self.fp, fn, args, batchable=batchable,
+                                       tenant=self.tenant, qos=self.qos)
 
         def _record(meta: dict, out: Any) -> Any:
             wall = time.perf_counter() - t0

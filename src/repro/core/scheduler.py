@@ -25,7 +25,15 @@ batch size discounts the QUEUEING term of the score — n requests already
 in flight there cost ~n/avg_batch stacked dispatches, not n serial ones —
 so under load a batch-amortizing destination correctly outbids an
 otherwise identical serial one (base link/compute terms are untouched:
-coalescing amortizes dispatch, it does not speed up the wire)."""
+coalescing amortizes dispatch, it does not speed up the wire).
+
+Tenant awareness (multi-tenant fair-share serving): the same capability
+ingest records the destination's per-tenant stats (``tenant_stats``: queue
+depth, in-flight, throttle counts vs the advertised ``tenant_limits``).
+Scoring with ``tenant=`` penalizes destinations where THAT tenant is
+already saturated — at its admission cap, recently throttled, or sitting
+on a deep drain queue — so a tenant's new sessions route around its own
+hotspots instead of piling on (other tenants' scores are untouched)."""
 from __future__ import annotations
 
 import concurrent.futures as _fut
@@ -45,17 +53,21 @@ class DeviceAwareScheduler:
     def __init__(self, registry: AcceleratorRegistry,
                  load_penalty: float = 1.0,
                  backpressure_penalty: float = 1.0,
-                 stall_decay_halflife_s: float = 30.0) -> None:
+                 stall_decay_halflife_s: float = 30.0,
+                 tenant_penalty: float = 2.0) -> None:
         self.registry = registry
         self.load_penalty = load_penalty
         self.backpressure_penalty = backpressure_penalty
         self.stall_decay_halflife_s = stall_decay_halflife_s
+        self.tenant_penalty = tenant_penalty
         self._stats_lock = threading.Lock()
         self._runtime_stats: dict[str, dict] = {}
         self._stall_rate: dict[str, float] = {}
         self._stall_seen: dict[str, float] = {}
         self._runtimes: dict[str, object] = {}
         self._avg_batch: dict[str, float] = {}
+        self._tenant_stats: dict[str, dict] = {}
+        self._tenant_limits: dict[str, dict] = {}
 
     # -- data-plane feedback -----------------------------------------------
     def attach_runtime(self, name: str, runtime) -> None:
@@ -116,12 +128,54 @@ class DeviceAwareScheduler:
                 avg = max(float(cs["requests"]) / float(cs["batches"]), 1.0)
             else:
                 avg = 2.0       # capable but unmeasured: assume pairs
+        ts = capabilities.get("tenant_stats") or {}
+        tl = capabilities.get("tenant_limits") or {}
         with self._stats_lock:
             self._avg_batch[name] = avg
+            self._tenant_stats[name] = {t: dict(s) for t, s in ts.items()}
+            self._tenant_limits[name] = dict(tl)
 
     def _dispatch_amortization(self, name: str) -> float:
         with self._stats_lock:
             return self._avg_batch.get(name, 1.0)
+
+    def tenant_stats(self, name: str, tenant: str | None = None) -> dict:
+        """The recorded per-tenant destination stats (one tenant, or all)."""
+        with self._stats_lock:
+            stats = self._tenant_stats.get(name, {})
+            if tenant is not None:
+                return dict(stats.get(tenant, {}))
+            return {t: dict(s) for t, s in stats.items()}
+
+    def tenant_saturation(self, name: str, tenant: str) -> float:
+        """How saturated ``tenant`` already is at destination ``name``, in
+        [0, 1]: the max of (in-flight vs the advertised admission cap),
+        (throttle share of its admission attempts), and (its drain-queue
+        depth, soft-saturating).  0.0 when the destination never advertised
+        stats for this tenant."""
+        with self._stats_lock:
+            ts = self._tenant_stats.get(name, {}).get(tenant)
+            limits = self._tenant_limits.get(name, {})
+        if not ts:
+            return 0.0
+        sat = 0.0
+        max_inflight = limits.get("max_inflight") or 0
+        if max_inflight:
+            sat = max(sat, min(ts.get("inflight", 0) / max_inflight, 1.0))
+        throttled = ts.get("throttled", 0)
+        if throttled:
+            # completions = the admission counter when present ("served"
+            # counts every admitted run, coalesced or not); falling back to
+            # the coalescer's "drained".  Never sum them — a coalesced
+            # request increments BOTH, which would halve the penalty on
+            # exactly the fair-drain destinations this term targets.
+            completions = ts.get("served", ts.get("drained", 0))
+            sat = max(sat, min(throttled / max(throttled + completions, 1),
+                               1.0))
+        depth = ts.get("queue_depth", 0)
+        if depth:
+            sat = max(sat, depth / (depth + 4.0))
+        return sat
 
     def runtime_stats(self, name: str | None = None) -> dict:
         """The recorded data-plane snapshots (all members, or one)."""
@@ -139,23 +193,29 @@ class DeviceAwareScheduler:
             rate = self._stall_rate.get(name, 0.0)
         return 1.0 + self.backpressure_penalty * rate
 
-    def score(self, w: Workload, va: VirtualAccelerator) -> float:
+    def score(self, w: Workload, va: VirtualAccelerator,
+              tenant: str | None = None) -> float:
         # queueing discount: n in-flight requests at a coalescing
         # destination collapse into ~n/avg_batch stacked dispatches
         eff_inflight = va.inflight / self._dispatch_amortization(va.name)
         base = estimate_request_time(w, va.spec, eff_inflight,
                                      self.load_penalty)
-        return base * self._backpressure_factor(va.name)
+        s = base * self._backpressure_factor(va.name)
+        if tenant is not None:
+            s *= 1.0 + self.tenant_penalty * self.tenant_saturation(va.name,
+                                                                    tenant)
+        return s
 
-    def candidates(self, w: Workload,
-                   exclude: tuple[str, ...] = ()) -> list[VirtualAccelerator]:
+    def candidates(self, w: Workload, exclude: tuple[str, ...] = (),
+                   tenant: str | None = None) -> list[VirtualAccelerator]:
         pool = [va for va in self.registry.healthy()
                 if va.name not in exclude
                 and va.spec.mem_bytes >= w.model_bytes]
-        return sorted(pool, key=lambda va: self.score(w, va))
+        return sorted(pool, key=lambda va: self.score(w, va, tenant))
 
-    def pick(self, w: Workload, exclude: tuple[str, ...] = ()) -> VirtualAccelerator:
-        cands = self.candidates(w, exclude)
+    def pick(self, w: Workload, exclude: tuple[str, ...] = (),
+             tenant: str | None = None) -> VirtualAccelerator:
+        cands = self.candidates(w, exclude, tenant)
         if not cands:
             raise NoDestinationError(
                 f"no healthy accelerator can host {w.name} "

@@ -14,6 +14,15 @@ check loudly instead of misparsing the request id as a header length:
 The msgpack header carries the treedef (as a nested template), per-leaf
 dtype/shape, the codec, per-buffer lengths, and arbitrary metadata.
 
+**Well-known metadata keys** (optional; same protocol version): ``run``
+requests may carry ``"tenant"`` (string identity for the destination's
+fair-share drain and admission control) and ``"qos"``
+(``{"weight": float, "priority": int}``, see ``repro.avec.QoS``);
+throttled responses carry ``"throttled": True``, ``"tenant"`` and
+``"retry_after_s"`` alongside ``"ok": False`` (typed backpressure — see
+``repro.core.executor.TenantThrottled``).  Peers that predate these keys
+ignore them; nothing in the frame layout changed.
+
 **Vectored frames.** ``pack_message`` does NOT join the frame into one
 ``bytes``: it returns a :class:`Frame` — a list of buffer segments
 ``[preamble+header, leaf0, leaf1, ...]`` where ``raw``-codec leaves are

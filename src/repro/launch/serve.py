@@ -47,6 +47,25 @@ def main() -> None:
     ap.add_argument("--coalesce", action="store_true",
                     help="destination role: micro-batch concurrent "
                          "batchable run ops into stacked dispatches")
+    ap.add_argument("--tenant-weights", default="",
+                    help="destination role: pin per-tenant fair-drain "
+                         "weights, e.g. acme:3,beta:1 (overrides "
+                         "frame-declared qos)")
+    ap.add_argument("--tenant-max-inflight", type=int, default=0,
+                    help="destination role: per-tenant admission cap on "
+                         "concurrent run requests (0 = unlimited; beyond "
+                         "it the tenant gets TenantThrottled)")
+    ap.add_argument("--tenant-max-bytes", type=float, default=0.0,
+                    help="destination role: per-tenant admission cap on "
+                         "in-flight payload bytes (0 = unlimited)")
+    ap.add_argument("--tenant", default=None,
+                    help="host role: tenant identity for the session "
+                         "(isolated destination caches + fair-share drain)")
+    ap.add_argument("--qos-weight", type=float, default=1.0,
+                    help="host role: declared fair-share weight")
+    ap.add_argument("--qos-priority", type=int, default=0,
+                    help="host role: declared priority class (higher "
+                         "drains first)")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--max-in-flight", type=int, default=8,
@@ -60,11 +79,21 @@ def main() -> None:
 
     if args.role == "destination":
         lib = make_model_library(cfg, max_cache_len=args.max_len)
+        weights = {}
+        for part in args.tenant_weights.split(","):
+            if part.strip():
+                tname, _, w = part.partition(":")
+                weights[tname.strip()] = float(w or 1.0)
         ex = DestinationExecutor({"lm": lib}, name=f"{args.arch}-dest",
-                                 coalesce=args.coalesce)
+                                 coalesce=args.coalesce,
+                                 tenant_weights=weights or None,
+                                 tenant_max_inflight=args.tenant_max_inflight,
+                                 tenant_max_bytes=args.tenant_max_bytes)
         server = TCPServer(ex.handle, port=args.port).start()
         print(f"destination executor for {args.arch} on port {server.port} "
-              f"(coalesce={args.coalesce}; ctrl-c to stop)")
+              f"(coalesce={args.coalesce}, tenant_weights={weights}, "
+              f"tenant caps inflight={args.tenant_max_inflight}/"
+              f"bytes={args.tenant_max_bytes:.0f}; ctrl-c to stop)")
         try:
             while True:
                 time.sleep(1)
@@ -85,7 +114,10 @@ def main() -> None:
                       f"runtime {type(client.runtime(name)).__name__}, "
                       f"codec {client.codec_for(name)}, "
                       f"coalesce={caps.coalesce}")
-            sess = client.session(cfg, params, "lm")
+            sess = client.session(
+                cfg, params, "lm", tenant=args.tenant,
+                qos=avec.QoS(weight=args.qos_weight,
+                             priority=args.qos_priority))
             rng = np.random.default_rng(args.seed)
             prompts = {f"r{i}": {"tokens": rng.integers(
                 0, cfg.vocab_size, (1, 16)).astype(np.int32),
@@ -109,6 +141,14 @@ def main() -> None:
                       f"recv retries {s['recv_retries']}, "
                       f"{s['bytes_sent'] / 1e6:.1f}MB out / "
                       f"{s['bytes_received'] / 1e6:.1f}MB in")
+            for name in client.destinations:
+                ts = client.refresh_capabilities(name).tenant_stats
+                for tenant, row in sorted(ts.items()):
+                    print(f"[{name}] tenant {tenant}: "
+                          f"share={row.get('drain_share', 0.0):.2f} "
+                          f"served={row.get('served', 0)} "
+                          f"throttled={row.get('throttled', 0)} "
+                          f"queue={row.get('queue_depth', 0)}")
         return
 
     eng = ServingEngine(cfg, params, max_batch=args.max_batch,

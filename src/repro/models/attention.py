@@ -12,7 +12,6 @@ KV caches are plain pytrees: {"k": (B, S_max, K, hd), "v": (B, S_max, K, hd)}.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

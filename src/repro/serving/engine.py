@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import collections
 import itertools
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Optional
@@ -30,9 +31,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.executor import TenantThrottled, _throttle_backoff
 from repro.models import model as M
-from repro.models import transformer as tf
-from repro.models import encdec as ed
 
 
 @dataclass
@@ -180,14 +180,26 @@ class PipelinedOffloadFrontend:
     *concurrent* server-side calls, and a single TCP connection is served
     serially, so it only pays off when several frontends/connections hit the
     same destination; over one connection it just adds the coalescing window
-    to each request's latency.  Hence the default is False."""
+    to each request's latency.  Hence the default is False.
+
+    ``tenant``/``qos`` ride in every request's frame metadata: the
+    destination drains tenants fairly (weighted deficit-round-robin with
+    priority classes) and may answer ``TenantThrottled`` at its per-tenant
+    admission cap.  The sync-runtime fallback retries that with jitter
+    inside ``HostRuntime.run``; on the pipelined path a raw :meth:`submit`
+    future surfaces it, and :meth:`map`'s gather owns the jittered
+    re-submit loop (bounded by the runtime's ``throttle_retries``) so a
+    fan-out over a capped tenant degrades to backoff, not failure."""
 
     def __init__(self, runtime, fp: str, fn: str, *,
-                 batchable: bool = False) -> None:
+                 batchable: bool = False, tenant: Optional[str] = None,
+                 qos: Optional[dict] = None) -> None:
         self.runtime = runtime
         self.fp = fp
         self.fn = fn
         self.batchable = batchable
+        self.tenant = tenant
+        self.qos = qos
         self.submitted = 0
         self._pool: Optional[ThreadPoolExecutor] = None
 
@@ -203,17 +215,42 @@ class PipelinedOffloadFrontend:
         self.submitted += 1
         if hasattr(self.runtime, "run_async"):
             inner = self.runtime.run_async(self.fp, self.fn, args,
-                                           batchable=self.batchable)
+                                           batchable=self.batchable,
+                                           tenant=self.tenant, qos=self.qos)
             return self.runtime.chain(inner, lambda meta, tree: tree)
         if self._pool is None:
             self._pool = ThreadPoolExecutor(max_workers=1)
         return self._pool.submit(self.runtime.run, self.fp, self.fn, args,
-                                 batchable=self.batchable)
+                                 batchable=self.batchable,
+                                 tenant=self.tenant, qos=self.qos)
 
     def map(self, requests: dict) -> dict:
-        """Submit ``{rid: args}`` keeping the pipeline full; gather all."""
+        """Submit ``{rid: args}`` keeping the pipeline full; gather all.
+        A request bounced by ``TenantThrottled`` is re-submitted with
+        jittered backoff (the pipelined path's retry loop — run_async is
+        single-attempt by design)."""
         futs = {rid: self.submit(args) for rid, args in requests.items()}
-        return {rid: fut.result() for rid, fut in futs.items()}
+        return {rid: self.gather(fut, requests[rid])
+                for rid, fut in futs.items()}
+
+    def gather(self, fut: Future, args: Any) -> Any:
+        """Resolve one :meth:`submit` future, re-submitting on
+        ``TenantThrottled`` with jittered backoff.  Only the pipelined path
+        retries here — the sync-runtime fallback already retried inside
+        ``HostRuntime.run``, and stacking a second loop on top would square
+        the attempt count."""
+        retries = (getattr(self.runtime, "throttle_retries", 0)
+                   if hasattr(self.runtime, "run_async") else 0)
+        attempt = 0
+        while True:
+            try:
+                return fut.result()
+            except TenantThrottled as e:
+                if attempt >= retries:
+                    raise
+                time.sleep(_throttle_backoff(attempt, e.retry_after_s))
+                attempt += 1
+                fut = self.submit(args)
 
     def stats(self) -> dict:
         """Frontend + data-plane counters: the runtime's adaptive window,
@@ -257,14 +294,18 @@ class ShardedOffloadFrontend:
     def map(self, requests: dict) -> dict:
         """Round-robin ``{rid: args}`` over the shards, gather all results.
         Submission interleaves shards so every destination's pipeline fills
-        before any result is awaited."""
+        before any result is awaited.  TenantThrottled bounces retry on the
+        shard that served them (each frontend's own jittered gather)."""
         rr = itertools.cycle(range(len(self.frontends)))
         futs = {}
         for rid, args in requests.items():
             i = next(rr)
             self.assigned[i] += 1
-            futs[rid] = self.frontends[i].submit(args)
-        return {rid: fut.result() for rid, fut in futs.items()}
+            futs[rid] = (i, self.frontends[i].submit(args))
+        return {rid: (self.frontends[i].gather(fut, requests[rid])
+                      if hasattr(self.frontends[i], "gather")
+                      else fut.result())
+                for rid, (i, fut) in futs.items()}
 
     def stats(self) -> dict:
         """Per-shard frontend/data-plane counters keyed by shard name."""

