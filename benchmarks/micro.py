@@ -261,6 +261,196 @@ def backpressure_probe(frames: int = 6, frame_floats: int = 128 * 1024,
     }
 
 
+def recv_ring_probe(frames: int = 160, frame_floats: int = 128 * 1024,
+                    held_frames: int = 8, warmup: int = 16,
+                    max_in_flight: int = 4, timeout: float = 60.0) -> dict:
+    """Steady-state pooled-recv probe (the recv ring buffer acceptance rig).
+
+    A pipelined host drives an in-process echo destination over a
+    socketpair; both directions receive into ``BufferPool`` slabs and the
+    destination's reply payload is a zero-copy view over its pooled request
+    lease.  Three measurements:
+
+    * **pool hit rate / fallback allocations** over the measured window
+      (steady state must be all hits: zero payload-buffer allocations per
+      received frame, straight from the pool's own counters);
+    * **bytes allocated per received frame via tracemalloc** (filtered to
+      ``transport.py`` + ``memory.py``): ``held_frames`` sequential round
+      trips with every response HELD live between two snapshots, so a
+      per-frame payload ``bytearray`` cannot hide behind prompt frees —
+      pooled recv lands in pre-snapshot slabs (~lease-object bytes), the
+      unpooled baseline shows the full payload per frame;
+    * **recv throughput vs the unpooled (PR-4) path**: a single-threaded
+      sender-preload loop (send one prebuilt wire frame, time
+      ``recv`` + unpack + release) with ``pool=False`` as the baseline —
+      deterministic by construction (an in-process echo *thread* shares the
+      GIL with the timed side and its scheduling jitter swamps the few-
+      percent effect); passes interleave modes and take the min per mode.
+    """
+    import gc
+    import socket
+    import struct
+    import threading
+    import tracemalloc
+
+    from repro.core import memory as memory_mod
+    from repro.core import transport as transport_mod
+    from repro.core.executor import PipelinedHostRuntime
+    from repro.core.memory import BufferPool, release_buffer
+    from repro.core.serialization import (frame_request_id, pack_message,
+                                          unpack_message)
+    from repro.core.transport import (ChannelClosed, TCPChannel, _recv_frame,
+                                      _send_frame)
+
+    def build(pooled: bool):
+        a, b = socket.socketpair()
+        dest_pool = BufferPool() if pooled else None
+        stop = threading.Event()
+
+        def destination():
+            hdr = bytearray(8)
+            try:
+                while not stop.is_set():
+                    req = _recv_frame(b, dest_pool, hdr)
+                    rid = frame_request_id(req)
+                    _, tree = unpack_message(req)
+                    _send_frame(b, pack_message(
+                        {"ok": True, "compute_s": 1e-4},
+                        {"y": tree["x"]}, request_id=rid))
+                    del tree                # drop leaf pins, then the base
+                    release_buffer(req)     # ref: the slab region recycles
+            except (ChannelClosed, OSError):
+                pass
+
+        t = threading.Thread(target=destination, daemon=True)
+        t.start()
+        rt = PipelinedHostRuntime(TCPChannel(a, pool=None if pooled else False),
+                                  max_in_flight=max_in_flight, timeout=timeout)
+        return rt, stop, t, b
+
+    x = np.arange(frame_floats, dtype=np.float32)
+
+    def pump(rt, n: int) -> float:
+        """Closed-loop stream of ``n`` frames, results dropped on arrival."""
+        import collections
+        futs = collections.deque()
+        t0 = time.perf_counter()
+        for _ in range(n):
+            futs.append(rt.submit({"op": "noop"}, {"x": x}))
+            while len(futs) >= max_in_flight:
+                _, out = rt.wait(futs.popleft(), timeout=timeout)
+                del out
+        while futs:
+            _, out = rt.wait(futs.popleft(), timeout=timeout)
+            del out
+        return time.perf_counter() - t0
+
+    def teardown(rt, stop, t, b):
+        stop.set()
+        rt.close()
+        try:
+            b.close()
+        except OSError:
+            pass
+        t.join(timeout=5)
+
+    # -- pipelined steady state: pool counters over a real offload stream --
+    rig_pooled = build(pooled=True)
+    rt = rig_pooled[0]
+    pool = rt.channel.recv_pool
+    pump(rt, warmup)
+    gc.collect()
+    before = pool.stats()
+    pump(rt, frames)
+    after = pool.stats()
+    hit_rate = ((after["hits"] - before["hits"])
+                / max(after["acquired"] - before["acquired"], 1))
+    fallback_allocs = after["misses"] - before["misses"]
+
+    # -- tracemalloc: bytes allocated per received frame, responses held ---
+    filters = [tracemalloc.Filter(True, transport_mod.__file__),
+               tracemalloc.Filter(True, memory_mod.__file__)]
+
+    def held_alloc_per_frame(rt) -> float:
+        gc.collect()
+        tracemalloc.start()
+        snap1 = tracemalloc.take_snapshot().filter_traces(filters)
+        held = [rt.wait(rt.submit({"op": "noop"}, {"x": x}),
+                        timeout=timeout) for _ in range(held_frames)]
+        snap2 = tracemalloc.take_snapshot().filter_traces(filters)
+        tracemalloc.stop()
+        grown = sum(max(d.size_diff, 0)
+                    for d in snap2.compare_to(snap1, "filename"))
+        del held
+        gc.collect()
+        return grown / held_frames
+
+    held_alloc_per_frame(rt)    # warm the ring's lazy slab growth for a
+    pooled_alloc = held_alloc_per_frame(rt)     # full held window first
+    steady = pool.stats()
+    teardown(*rig_pooled)
+    balanced = steady["acquired"] == steady["released"] \
+        and steady["outstanding"] == 0
+
+    # -- unpooled (PR-4) baseline: the held-allocation contrast ------------
+    rig_plain = build(pooled=False)
+    pump(rig_plain[0], warmup)
+    held_alloc_per_frame(rig_plain[0])          # symmetric warm pass
+    unpooled_alloc = held_alloc_per_frame(rig_plain[0])
+    teardown(*rig_plain)
+
+    # -- recv throughput, single-threaded sender-preload loop --------------
+    resp_frame = pack_message({"ok": True, "compute_s": 1e-4}, {"y": x})
+    wire = struct.pack("<Q", len(resp_frame)) + bytes(resp_frame)
+
+    def sync_rig(pooled: bool):
+        a, b = socket.socketpair()
+        for s in (a, b):
+            s.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, 2 << 20)
+            s.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, 2 << 20)
+        return TCPChannel(a, pool=None if pooled else False), b
+
+    def sync_pass(ch, peer, n: int) -> float:
+        t0 = time.perf_counter()
+        for _ in range(n):
+            peer.sendall(wire)
+            resp = ch.recv()
+            _, out = unpack_message(resp)
+            del out
+            release_buffer(resp)
+        return time.perf_counter() - t0
+
+    rigs = {True: sync_rig(True), False: sync_rig(False)}
+    for mode in (True, False):
+        sync_pass(*rigs[mode], warmup)
+    walls: dict = {True: [], False: []}
+    for _ in range(5):
+        for mode in (True, False):
+            walls[mode].append(sync_pass(*rigs[mode], frames))
+    pooled_wall, unpooled_wall = min(walls[True]), min(walls[False])
+    for ch, peer in rigs.values():
+        ch.close()
+        peer.close()
+
+    frame_bytes = frame_floats * 4
+    return {
+        "frames": frames,
+        "frame_payload_bytes": frame_bytes,
+        "held_frames": held_frames,
+        "pool_hit_rate": hit_rate,
+        "steady_state_fallback_allocs": fallback_allocs,
+        "pool_balanced_at_teardown": balanced,
+        "payload_alloc_per_frame_bytes": pooled_alloc,
+        "unpooled_alloc_per_frame_bytes": unpooled_alloc,
+        "pooled_wall_s": pooled_wall,
+        "unpooled_wall_s": unpooled_wall,
+        "recv_throughput_mbps": frames * frame_bytes / pooled_wall / 1e6,
+        "baseline_throughput_mbps": frames * frame_bytes / unpooled_wall / 1e6,
+        "throughput_ratio_vs_unpooled": unpooled_wall / pooled_wall,
+        "pool": steady,
+    }
+
+
 def tenant_fairness_probe(weight_a: float = 3.0, weight_b: float = 1.0,
                           threads_per_tenant: int = 6,
                           warmup_s: float = 0.4, measure_s: float = 1.5,
@@ -419,6 +609,7 @@ def dataplane_report(frames: int = 8, in_flight: int = 4) -> dict:
     bp = backpressure_probe()
     t_plain, t_coal, stats = _coalesce_walls()
     fairness = tenant_fairness_probe()
+    ring = recv_ring_probe()
     return {
         "serialize_raw_512x512": {
             "payload_bytes": nb,
@@ -440,6 +631,7 @@ def dataplane_report(frames: int = 8, in_flight: int = 4) -> dict:
             "compute_ema_s": pipe_stats["compute_ema_s"],
         },
         "backpressure_small_sockbuf": bp,
+        "recv_ring_buffer": ring,
         "tenant_fairness_2way": fairness,
         "coalesced_dispatch": {
             "clients": 8, "reps": 4,

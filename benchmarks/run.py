@@ -96,6 +96,19 @@ def main() -> None:
                          f"{bp['frames']}x{bp['frame_bytes']}B frames thru "
                          f"{bp['socket_buffer_bytes']}B sockbufs in "
                          f"{bp['wall_s']:.2f}s (deadlock-free)"))
+            rb = report["recv_ring_buffer"]
+            rows.append(("dataplane/recv_pool_hit_rate",
+                         rb["pool_hit_rate"],
+                         f"{rb['steady_state_fallback_allocs']} fallback "
+                         f"allocs over {rb['frames']} pipelined frames"))
+            rows.append(("dataplane/recv_alloc_per_frame_bytes",
+                         rb["payload_alloc_per_frame_bytes"],
+                         f"unpooled={rb['unpooled_alloc_per_frame_bytes']:.0f}B "
+                         f"({rb['frame_payload_bytes']}B payloads)"))
+            rows.append(("dataplane/recv_throughput_vs_unpooled",
+                         rb["throughput_ratio_vs_unpooled"],
+                         f"{rb['recv_throughput_mbps']:.0f}MB/s pooled vs "
+                         f"{rb['baseline_throughput_mbps']:.0f}MB/s"))
             tf = report["tenant_fairness_2way"]
             rows.append(("dataplane/tenant_fairness_share_a",
                          tf["share_a"],

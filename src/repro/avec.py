@@ -158,7 +158,11 @@ class ConnectPolicy:
     max_in_flight: int = 8          # pipelined window cap (adaptive below)
     adaptive_window: bool = True
     timeout: float = 120.0
-    copy_results: bool = False
+    copy_results: bool = False      # copy leaves at unpack (frees recv pool)
+    #: hand sessions/map owning copies of results AFTER profiling, releasing
+    #: recv-pool lease pins at materialization (zero-copy views otherwise;
+    #: see repro.core.memory for the lease contract)
+    detach_results: bool = False
     failover: bool = True           # transparent re-route on node death
     #: snapshot the destination's mutable session state back to the host
     #: every N calls (0 = off).  The default (1) is correctness-first —
@@ -453,7 +457,8 @@ class AvecClient:
             return sib
         sib = AvecSession(sess.cfg, sess.params, self._runtime_for(name),
                           sess.lib, profiler=sess.profiler,
-                          name=f"{sess.name}@{name}")
+                          name=f"{sess.name}@{name}",
+                          detach_results=sess.detach_results)
         sib.fp = sess.fp                # tenant scoping carries over
         sib.tenant = sess.tenant        # ...as does the fair-share identity
         sib.qos = sess.qos
@@ -509,7 +514,8 @@ class ClientSession(AvecSession):
                  qos: Optional[dict] = None,
                  workload: Workload, name: str = "session") -> None:
         super().__init__(cfg, params, client._runtime_for(destination), lib,
-                         name=name)
+                         name=name,
+                         detach_results=client.policy.detach_results)
         self.client = client
         self.tenant = tenant
         self.qos = qos
@@ -666,7 +672,8 @@ class ClientSession(AvecSession):
             b = batchable if batchable is not None else caps.coalesce
             frontends.append(PipelinedOffloadFrontend(
                 sib.runtime, sib.fp, fn, batchable=b,
-                tenant=self.tenant, qos=self.qos))
+                tenant=self.tenant, qos=self.qos,
+                detach_results=self.detach_results))
         sharded = ShardedOffloadFrontend(frontends, names=names)
         # hold the registry's live-load counters for the round-robin
         # assignment (shard i serves every len(names)-th request) so

@@ -5,6 +5,9 @@ from repro.core.virtualization import (  # noqa: F401
     PAPER_TESTBED, JETSON_NANO, JETSON_TX2, CLOUD_RTX, TPU_V5E,
 )
 from repro.core.cache import ModelCache, model_fingerprint  # noqa: F401
+from repro.core.memory import (  # noqa: F401
+    BufferLease, BufferPool, PooledView, detach_tree, release_buffer,
+)
 from repro.core.executor import (  # noqa: F401
     DestinationExecutor, HostRuntime, PipelinedHostRuntime, RemoteError,
 )

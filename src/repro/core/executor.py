@@ -66,6 +66,14 @@ dominating the cycle; these are the levers that shrink it):
   comm/compute ratio (per-response ``compute_s`` vs measured wire time):
   ~2 when destination compute dominates (double buffering suffices), and
   growing toward the cap as the link dominates.
+* **Pooled receive buffers** (``repro.core.memory``): frames arrive in
+  recycled ``BufferPool`` slabs as ``BufferLease``s.  Runtimes release the
+  base reference once a response is unpacked (``_rpc`` / pipelined
+  ``_dispatch``); decoded zero-copy leaves pin the lease until collected.
+  On the destination, the transport releases a request after the response
+  is written, and the coalescer ``retain``s queued requests until their
+  batch dispatches — steady-state offload allocates zero payload buffers
+  per received frame.
 
 Runtime stats (``PipelinedHostRuntime.stats()``) — exported to
 ``DeviceAwareScheduler.record_runtime_stats`` and
@@ -101,6 +109,7 @@ import jax
 import numpy as np
 
 from repro.core.cache import ModelCache
+from repro.core.memory import BufferLease, release_buffer
 from repro.core.serialization import (PROTOCOL_VERSION, SUPPORTED_CODECS,
                                       Frame, frame_preamble_ok,
                                       frame_request_id, pack_message,
@@ -132,6 +141,18 @@ def _remote_exception(rmeta: dict) -> RemoteError:
         return TenantThrottled(msg, rmeta.get("tenant", DEFAULT_TENANT),
                                float(rmeta.get("retry_after_s", 0.01)))
     return RemoteError(msg)
+
+
+def _clone_channel_exc(exc: BaseException) -> BaseException:
+    """A traceback-free copy of a channel-failure exception, same type and
+    message.  Stored (and re-raised) instead of the original: an exception
+    object held for a dead runtime's lifetime grows a traceback on every
+    raise, and that traceback pins the raising frames' locals — decoded
+    result trees and their recv-pool leases included."""
+    try:
+        return type(exc)(*exc.args) if exc.args else type(exc)(str(exc))
+    except Exception:  # noqa: BLE001 — exotic ctor signature
+        return ChannelClosed(f"{type(exc).__name__}: {exc}")
 
 
 def _throttle_backoff(attempt: int, retry_after_s: float) -> float:
@@ -185,9 +206,12 @@ class _QoSQueues:
     strict priority classes.
 
     NOT thread-safe: the coalescer calls every method under its condition
-    variable.  Items are ``(key, meta, tree, future)`` tuples; a *batch* is
-    a run of consecutive same-key items from ONE tenant's queue (coalescing
-    never mixes tenants into a stacked dispatch).
+    variable.  Items are ``(key, meta, tree, future, lease)`` tuples (the
+    last element is the request frame's recv-pool ``BufferLease`` or
+    ``None`` — retained on enqueue, released after the batch holding the
+    item dispatches); a *batch* is a run of consecutive same-key items from
+    ONE tenant's queue (coalescing never mixes tenants into a stacked
+    dispatch).
 
     Scheduling: the highest priority class with pending work is served
     first.  Within a class, tenants are visited round-robin; each visit
@@ -334,15 +358,25 @@ class _Coalescer:
         self._worker = threading.Thread(target=self._loop, daemon=True)
         self._worker.start()
 
-    def submit(self, key: tuple, meta: dict, tree: Any) -> tuple[dict, Any]:
+    def submit(self, key: tuple, meta: dict, tree: Any,
+               lease: BufferLease | None = None) -> tuple[dict, Any]:
+        """``lease`` — the request frame's recv-pool lease, if any.  The
+        coalescer takes one reference atomically with the enqueue (so the
+        frame's bytes survive in the queue past the connection loop's own
+        release) and drops it after the batch holding this request is
+        dispatched — or in the stop-drain if the executor shuts down
+        first."""
         fut: Future = Future()
         # check-stop and enqueue are atomic vs stop(): nothing can be put
         # after the stop flag is set, so the post-stop drain is exhaustive
         with self._cv:
             if self._stopped:
                 raise ChannelClosed("coalescer stopped")
+            if lease is not None:
+                lease.retain()      # ownership transfers with the enqueue
             tenant = meta.get("tenant") or DEFAULT_TENANT
-            self._q.push(tenant, meta.get("qos"), (key, meta, tree, fut))
+            self._q.push(tenant, meta.get("qos"),
+                         (key, meta, tree, fut, lease))
             self._cv.notify_all()
         return fut.result()
 
@@ -359,6 +393,7 @@ class _Coalescer:
         for item in left:
             if not item[3].done():
                 item[3].set_exception(ChannelClosed("coalescer stopped"))
+            release_buffer(item[4])     # never strand a queued frame's lease
 
     @property
     def tenant_stats(self) -> dict:
@@ -389,6 +424,11 @@ class _Coalescer:
                         batch += self._q.take_matching(
                             tq, key, self.max_batch - len(batch))
             self._dispatch(batch)
+            # drop the reference before parking on the cv: a lingering
+            # `batch` local would pin the last batch's trees (and their
+            # recv-pool leases' leaf pins) across the worker's entire idle
+            # period
+            batch = tq = key = None
         self._drain_failed()
 
     def _dispatch(self, batch: list) -> None:
@@ -400,12 +440,17 @@ class _Coalescer:
             self.stats["batches"] += 1
             self.stats["requests"] += len(batch)
             self.stats["max_batch"] = max(self.stats["max_batch"], len(batch))
-            for (_, _, _, fut), res in zip(batch, results):
+            for (_, _, _, fut, _), res in zip(batch, results):
                 fut.set_result(res)
         except Exception as e:  # noqa: BLE001 — propagate per request
-            for _, _, _, fut in batch:
+            for _, _, _, fut, _ in batch:
                 if not fut.done():
                     fut.set_exception(e)
+        finally:
+            # batch dispatched (stacked leaves were copied, outputs are
+            # fresh arrays): the queued request frames' bytes are done
+            for item in batch:
+                release_buffer(item[4])
 
 
 class DestinationExecutor:
@@ -438,6 +483,7 @@ class DestinationExecutor:
         self.tenant_max_bytes = float(tenant_max_bytes)
         self._adm_lock = threading.Lock()
         self._adm: dict[str, dict] = {}     # tenant -> admission counters
+        self._tls = threading.local()       # per-connection-thread recv lease
         self._coalescer = (_Coalescer(self._run_batch, coalesce_window_s,
                                       max_coalesce, tenant_weights)
                            if coalesce else None)
@@ -525,6 +571,10 @@ class DestinationExecutor:
                 f"executor {self.name}: unreadable frame preamble "
                 f"({len(raw)}B) — connection must be dropped")
         rid = frame_request_id(raw)
+        # the transport layer owns the request lease (released once the
+        # response is written); ops that must keep the frame's bytes alive
+        # past this call — the coalescer's queue — retain it from here
+        self._tls.lease = raw if isinstance(raw, BufferLease) else None
         try:
             meta, tree = unpack_message(raw)
             if self.fail:
@@ -536,6 +586,8 @@ class DestinationExecutor:
             return pack_message({"ok": False, "error": str(e),
                                  "trace": traceback.format_exc()},
                                 request_id=rid)
+        finally:
+            self._tls.lease = None
 
     # ------------------------------------------------------------------
     def _op_ping(self, meta, tree):
@@ -601,7 +653,8 @@ class DestinationExecutor:
         try:
             if self._coalescer is not None and meta.get("batchable"):
                 key = (meta["fp"], meta["fn"], codec, _batch_signature(tree))
-                rmeta, out_np = self._coalescer.submit(key, meta, tree)
+                rmeta, out_np = self._coalescer.submit(
+                    key, meta, tree, lease=getattr(self._tls, "lease", None))
             else:
                 rmeta, out_np = self._run_one(meta, tree)
             done_ok = True
@@ -707,7 +760,13 @@ class HostRuntime:
         self.bytes_sent += len(req)
         resp = self.channel.request(req, timeout=self.timeout)
         self.bytes_received += len(resp)
-        rmeta, rtree = unpack_message(resp, copy=self.copy_results)
+        try:
+            rmeta, rtree = unpack_message(resp, copy=self.copy_results)
+        finally:
+            # consumption point: drop the recv-pool lease's base reference
+            # (decoded leaf views carry their own pins; with copy_results
+            # the slab recycles immediately)
+            release_buffer(resp)
         if not rmeta.get("ok", False):
             raise _remote_exception(rmeta)
         return rmeta, rtree
@@ -965,7 +1024,7 @@ class PipelinedHostRuntime(HostRuntime):
                 became_receiver = False
                 with self._cv:
                     if self._broken is not None:
-                        raise self._broken
+                        self._raise_broken()
                     if not self._receiving:
                         self._receiving = True
                         became_receiver = True
@@ -1001,6 +1060,12 @@ class PipelinedHostRuntime(HostRuntime):
                     "channel failed: frame abandoned mid-send "
                     f"({state.sent}/{state.total}B written)"))
             raise
+
+    def _raise_broken(self) -> None:
+        """Raise the stored channel-failure exception as a fresh clone of
+        the same type (see :func:`_clone_channel_exc` — the stored object
+        must never accumulate tracebacks)."""
+        raise _clone_channel_exc(self._broken)
 
     def make_future(self) -> _PipelinedFuture:
         """A Future whose ``result()`` pumps this runtime's channel.  Use for
@@ -1060,7 +1125,7 @@ class PipelinedHostRuntime(HostRuntime):
                             on_pass()
                         return
                     if self._broken is not None:
-                        raise self._broken
+                        self._raise_broken()
                     if time.monotonic() >= deadline:
                         raise TimeoutError("pipelined rpc timeout")
                     if not self._receiving:
@@ -1110,6 +1175,14 @@ class PipelinedHostRuntime(HostRuntime):
             self._cv.notify_all()
 
     def _dispatch(self, data) -> None:
+        try:
+            self._dispatch_inner(data)
+        finally:
+            # future consumption: the raw frame is decoded (or dead) — drop
+            # the recv-pool lease's base ref; leaf views pin what they need
+            release_buffer(data)
+
+    def _dispatch_inner(self, data) -> None:
         rid = frame_request_id(data)
         now = time.monotonic()
         with self._cv:
@@ -1145,7 +1218,10 @@ class PipelinedHostRuntime(HostRuntime):
     def _fail_pending(self, exc: BaseException) -> None:
         with self._cv:
             if self._broken is None:
-                self._broken = exc
+                # store a traceback-free clone: the original keeps
+                # propagating (and growing a traceback) through the failing
+                # callers, and this slot outlives all of their frames
+                self._broken = _clone_channel_exc(exc)
             pending = list(self._pending.values())
             self._pending.clear()
             self._track.clear()
@@ -1204,9 +1280,15 @@ class PipelinedHostRuntime(HostRuntime):
             return self._window.window
 
     def stats(self) -> dict:
-        """Snapshot of the data-plane counters (see module docstring)."""
+        """Snapshot of the data-plane counters (see module docstring).
+        Includes the channel's recv-pool counters (hit rate, outstanding
+        leases) under ``recv_pool`` when the transport pools its receive
+        buffers."""
+        pool = getattr(self.channel, "recv_pool", None)
+        pool_stats = pool.stats() if pool is not None else None
         with self._cv:
             return {
+                **({"recv_pool": pool_stats} if pool_stats else {}),
                 "bytes_sent": self.bytes_sent,
                 "bytes_received": self.bytes_received,
                 "in_flight": len(self._pending),

@@ -19,6 +19,7 @@ from typing import Any, Callable, Optional
 
 from repro.core.cache import model_fingerprint
 from repro.core.executor import HostRuntime, RemoteError
+from repro.core.memory import detach_tree
 from repro.core.profiler import AvecProfiler
 from repro.core.serialization import tree_wire_bytes
 
@@ -131,11 +132,19 @@ class AvecSession:
     ``tenant``/``qos`` (set by the facade's tenant-scoped sessions) ride in
     every ``run`` frame's metadata, driving the destination's fair-share
     drain and per-tenant admission control.
+
+    Result-buffer lifetime: with a pooled transport, zero-copy results alias
+    recv-pool slab memory, which the pool keeps pinned as long as the
+    application references the arrays — correct, but an application
+    hoarding many results pins many slabs.  ``detach_results=True`` hands
+    back owning copies *after* the cycle is profiled (releasing the lease
+    pins eagerly), the session-layer analogue of the runtime's
+    ``copy_results`` (which detaches at unpack instead).
     """
 
     def __init__(self, cfg: Any, params: Any, runtime: HostRuntime,
                  lib: str, profiler: Optional[AvecProfiler] = None,
-                 name: str = "session") -> None:
+                 name: str = "session", detach_results: bool = False) -> None:
         self.cfg = cfg
         self.params = params
         self.runtime = runtime
@@ -146,6 +155,7 @@ class AvecSession:
         self.model_transfer_s: Optional[float] = None
         self.tenant: Optional[str] = None
         self.qos: Optional[dict] = None
+        self.detach_results = detach_results
         self._ready = False
 
     # ------------------------------------------------------------------
@@ -178,7 +188,9 @@ class AvecSession:
             bytes_sent=self.runtime.bytes_sent - sent0,
             bytes_received=self.runtime.bytes_received - recv0,
             fn=fn)
-        return out
+        # result materialization is the session's lease-release point: the
+        # cycle is profiled, so detach (if asked) before the app sees it
+        return detach_tree(out) if self.detach_results else out
 
     # ------------------------------------------------------------------
     def call_async(self, fn: str, args: Any, batchable: bool = False) -> Future:
@@ -203,7 +215,7 @@ class AvecSession:
             self.profiler.record_cycle(
                 gpu_s=compute, comm_s=max(wall - compute, 0.0),
                 bytes_sent=sent, bytes_received=tree_wire_bytes(out), fn=fn)
-            return out
+            return detach_tree(out) if self.detach_results else out
 
         # runtime.chain yields a pump-aware future: waiting on it drives the
         # channel (the pipelined runtime has no reader thread)

@@ -37,10 +37,16 @@ out-of-order without parsing the msgpack header
 (:func:`frame_request_id` peeks it in O(1)).
 
 **Zero-copy unpack.** ``unpack_message`` returns, for ``raw``-codec leaves,
-``np.frombuffer`` views over the received frame (read-only) instead of
-per-leaf copies; pass ``copy=True`` where the caller mutates results.
-Unpacking a :class:`Frame` directly (loopback / in-process channels) reads
-each leaf from its own segment — fully zero-copy end to end.
+views over the received frame (read-only) instead of per-leaf copies; pass
+``copy=True`` where the caller mutates results.  Unpacking a
+:class:`Frame` directly (loopback / in-process channels) reads each leaf
+from its own segment — fully zero-copy end to end.  When the frame arrived
+in **pooled recv memory** (a ``repro.core.memory.BufferLease`` from
+``TCPChannel``/``TCPServer``), each raw leaf is decoded in place as a
+``PooledView`` that *pins* the lease until the last array referencing it
+is garbage-collected — the slab cannot be recycled under a live view, and
+``copy=True`` detaches eagerly so the lease frees as soon as the receiving
+layer releases its base reference.
 
 ``DataTransfer`` generalizes the paper's Eq. 1: DT = fixed header + sum of
 argument bytes + result bytes.  ``eq1_bytes`` reproduces the exact paper
@@ -56,6 +62,7 @@ Codecs (beyond-paper, the slow-link levers):
 from __future__ import annotations
 
 import struct
+import threading
 from dataclasses import dataclass, field
 from typing import Any, Iterator
 
@@ -63,6 +70,8 @@ import msgpack
 import numpy as np
 
 import zlib
+
+from repro.core.memory import BufferLease
 
 try:  # container images may lack zstandard; gate it (no new deps)
     import zstandard
@@ -222,11 +231,16 @@ def _encode_leaf(arr: np.ndarray, codec: str):
     return raw, meta
 
 
-def _decode_leaf(buf, meta: dict, copy: bool) -> np.ndarray:
+def _decode_leaf(buf, meta: dict, copy: bool,
+                 lease: BufferLease | None = None) -> np.ndarray:
     dtype = _np_dtype(meta["dtype"])
     shape = tuple(meta["shape"])
     codec = meta.get("codec", "raw")
     if codec == "raw":
+        if lease is not None and not copy:
+            # decode in place over the pooled slab: the view pins the lease
+            # (released when the last referencing array is collected)
+            return lease.pin_ndarray(buf, dtype, shape)
         out = np.frombuffer(buf, dtype).reshape(shape)
         return out.copy() if copy else out
     raw = _decompress(buf, meta.get("alg", _COMPRESS_ALG))
@@ -270,11 +284,20 @@ def pack_message(meta: dict, tree: Any = None, codec: str = "raw",
     return Frame([head, *bufs])
 
 
+def _head_of(data):
+    """The preamble-bearing buffer of any frame form: vectored
+    :class:`Frame`, pooled ``BufferLease``, or plain bytes-like."""
+    if isinstance(data, Frame):
+        return data.segments[0]
+    if isinstance(data, BufferLease):
+        return data.view
+    return data
+
+
 def frame_request_id(data) -> int:
     """O(1) peek of the request id (no msgpack parse) — the pipelined
     reader's response-matching key."""
-    head = data.segments[0] if isinstance(data, Frame) else data
-    return struct.unpack_from("<Q", head, 4)[0]
+    return struct.unpack_from("<Q", _head_of(data), 4)[0]
 
 
 def frame_preamble_ok(data) -> bool:
@@ -283,8 +306,7 @@ def frame_preamble_ok(data) -> bool:
     request id back on a per-request error.  A frame that fails this check
     cannot be answered addressably at all: the connection must fail loudly
     instead (see ``DestinationExecutor.handle``)."""
-    head = data.segments[0] if isinstance(data, Frame) else data
-    mv = memoryview(head)
+    mv = memoryview(_head_of(data))
     return len(mv) >= PREAMBLE and bytes(mv[:4]) == MAGIC
 
 
@@ -296,25 +318,29 @@ def _parse_head(head) -> tuple[dict, int, int]:
 
 
 def unpack_message(data, copy: bool = False) -> tuple[dict, Any]:
-    """Unpack a frame (``bytes``/``bytearray``/``memoryview`` or a vectored
-    :class:`Frame`) into (meta, pytree).
+    """Unpack a frame (``bytes``/``bytearray``/``memoryview``, a vectored
+    :class:`Frame`, or a pooled ``BufferLease``) into (meta, pytree).
 
-    With ``copy=False`` (default), ``raw``-codec leaves are read-only
-    ``np.frombuffer`` views over the frame — the frame's buffer must outlive
-    them, which holds for the per-frame receive buffers our channels
-    allocate.  Pass ``copy=True`` where the caller mutates leaves in place.
+    With ``copy=False`` (default), ``raw``-codec leaves are read-only views
+    over the frame — the frame's buffer must outlive them.  For pooled
+    leases that lifetime is *enforced*: each decoded leaf pins the lease
+    (see module docstring), so the slab is only recycled once every view is
+    gone.  Pass ``copy=True`` where the caller mutates leaves in place or
+    wants the lease to free eagerly.
     """
     if isinstance(data, Frame):
         header, _, _ = _parse_head(data.segments[0])
         leaves = [_decode_leaf(seg, meta, copy)
                   for seg, meta in zip(data.segments[1:], header["leaves"])]
     else:
-        mv = memoryview(data)
+        lease = data if isinstance(data, BufferLease) else None
+        mv = lease.view if lease is not None else memoryview(data)
         header, _, hlen = _parse_head(mv)
         off = PREAMBLE + hlen
         leaves = []
         for blen, meta in zip(header["buf_lens"], header["leaves"]):
-            leaves.append(_decode_leaf(mv[off:off + blen], meta, copy))
+            leaves.append(_decode_leaf(mv[off:off + blen], meta, copy,
+                                       lease))
             off += blen
     tree = (_unflatten(header["template"], leaves)
             if header["template"] is not None else None)
@@ -327,21 +353,30 @@ def unpack_message(data, copy: bool = False) -> tuple[dict, Any]:
 
 @dataclass
 class DataTransfer:
-    """Tracks bytes crossing a link, per direction and per category."""
+    """Tracks bytes crossing a link, per direction and per category.
+
+    Thread-safe: pipelined runtimes and sharded ``map`` gathers record
+    concurrently from multiple threads, and ``n += x`` on a plain attribute
+    is a read-modify-write race that silently loses bytes."""
     sent: int = 0
     received: int = 0
     by_category: dict = field(default_factory=dict)
 
+    def __post_init__(self) -> None:
+        self._lock = threading.Lock()
+
     def record(self, n: int, direction: str = "sent", category: str = "args") -> None:
-        if direction == "sent":
-            self.sent += n
-        else:
-            self.received += n
-        self.by_category[category] = self.by_category.get(category, 0) + n
+        with self._lock:
+            if direction == "sent":
+                self.sent += n
+            else:
+                self.received += n
+            self.by_category[category] = self.by_category.get(category, 0) + n
 
     @property
     def total(self) -> int:
-        return self.sent + self.received
+        with self._lock:
+            return self.sent + self.received
 
 
 def tree_wire_bytes(tree: Any) -> int:

@@ -6,9 +6,16 @@
 * ``TCPChannel``       — real sockets with length-prefixed frames (the paper's
                          Boost-ASIO analogue).  Sends vectored frames with
                          ``socket.sendmsg`` scatter-gather (no join copy) and
-                         receives with ``recv_into`` a preallocated per-frame
-                         buffer (no chunk-list join).  ``TCPServer`` runs a
-                         DestinationExecutor behind a listening socket.
+                         receives with ``recv_into`` **pooled slab memory**
+                         (``repro.core.memory.BufferPool``): in the steady
+                         state a received frame costs zero payload-buffer
+                         allocations — the bytes land in a recycled ring
+                         slab and come back as a :class:`BufferLease` the
+                         consumer chain releases (pool misses fall back to a
+                         counted plain allocation; pass ``pool=False`` for
+                         the legacy per-frame ``bytearray``).  ``TCPServer``
+                         runs a DestinationExecutor behind a listening
+                         socket with one recv pool per connection.
 * ``SimulatedChannel`` — loopback + a virtual clock charging the calibrated
                          link model (latency + bytes/bandwidth + destination
                          serialization rate).  Used to reproduce the paper's
@@ -28,6 +35,7 @@ import threading
 import time
 from typing import Callable, Optional
 
+from repro.core.memory import BufferLease, BufferPool, release_buffer
 from repro.core.serialization import Frame
 
 
@@ -70,13 +78,23 @@ class Channel:
 class DirectChannel(Channel):
     """Zero-transport channel: requests go straight into an executor-style
     handler (``handle(bytes) -> bytes``) in-process.  The standard shim for
-    tests, benchmarks, and demos that don't need sockets."""
+    tests, benchmarks, and demos that don't need sockets.
+
+    Closure semantics match ``TCPChannel``: after :meth:`close`, every
+    ``request`` raises :class:`ChannelClosed` — runtimes never need to
+    special-case the channel class to learn a stub is dead."""
 
     def __init__(self, executor) -> None:
         self.executor = executor
+        self._closed = False
 
     def request(self, data, timeout=None):
+        if self._closed:
+            raise ChannelClosed("direct channel closed")
         return self.executor.handle(data)
+
+    def close(self) -> None:
+        self._closed = True
 
 
 # ---------------------------------------------------------------------------
@@ -84,6 +102,12 @@ class DirectChannel(Channel):
 # ---------------------------------------------------------------------------
 
 class LoopbackChannel(Channel):
+    """In-process queue pair.  Timeout/closure semantics mirror
+    ``TCPChannel`` — ``TimeoutError`` on a clean timeout,
+    :class:`ChannelClosed` once either side has closed (and *repeatably*:
+    the peer-closed sentinel is re-queued so every later ``recv``, from any
+    thread, sees the closure instead of blocking forever)."""
+
     def __init__(self, tx: queue.Queue, rx: queue.Queue) -> None:
         self._tx, self._rx = tx, rx
         self._closed = False
@@ -95,16 +119,19 @@ class LoopbackChannel(Channel):
 
     def send(self, data) -> None:
         if self._closed:
-            raise ChannelClosed
+            raise ChannelClosed("loopback channel closed")
         self._tx.put(data)
 
     def recv(self, timeout: Optional[float] = None):
+        if self._closed:
+            raise ChannelClosed("loopback channel closed")
         try:
             data = self._rx.get(timeout=timeout)
         except queue.Empty:
             raise TimeoutError("loopback recv timeout")
         if data is None:
-            raise ChannelClosed
+            self._rx.put(None)      # persist closure for other waiters
+            raise ChannelClosed("loopback peer closed")
         return data
 
     def close(self) -> None:
@@ -120,10 +147,12 @@ _IOV_MAX = 512          # segments per sendmsg call (conservative vs IOV_MAX)
 
 
 def _segments(data) -> list:
-    """Normalize bytes | Frame into a flat list of memoryview segments."""
+    """Normalize bytes | Frame | BufferLease into memoryview segments."""
     if isinstance(data, Frame):
         return [s if isinstance(s, memoryview) else memoryview(s)
                 for s in data.segments]
+    if isinstance(data, BufferLease):
+        return [data.view]
     return [memoryview(data)]
 
 
@@ -237,12 +266,25 @@ class _PartialRead(Exception):
         self.got = got
 
 
-def _recv_frame(sock: socket.socket) -> bytearray:
-    """Blocking frame receive into one preallocated buffer (server side)."""
-    hdr = bytearray(8)
+def _recv_frame(sock: socket.socket, pool: Optional[BufferPool] = None,
+                hdr: Optional[bytearray] = None):
+    """Blocking frame receive (server side).  With a ``pool``, the payload
+    lands in leased slab memory (returned as a ``BufferLease`` the caller
+    must release); without one, the legacy fresh ``bytearray``.  ``hdr`` is
+    an optional reusable 8-byte scratch so a connection loop performs zero
+    header allocations per frame."""
+    hdr = bytearray(8) if hdr is None else hdr
     try:
         _recv_into_exact(sock, memoryview(hdr))
         (n,) = struct.unpack("<Q", hdr)
+        if pool is not None:
+            lease = pool.acquire(n)
+            try:
+                _recv_into_exact(sock, lease.view)
+            except BaseException:
+                lease.release()     # partial frame: the region is garbage
+                raise
+            return lease
         buf = bytearray(n)
         _recv_into_exact(sock, memoryview(buf))
     except _PartialRead as e:
@@ -257,22 +299,33 @@ class TCPChannel(Channel):
     # callers must use the plain blocking path
     supports_resumable_send = bool(_MSG_DONTWAIT)
 
-    def __init__(self, sock: socket.socket) -> None:
+    def __init__(self, sock: socket.socket, pool=None) -> None:
+        """``pool`` — a shared :class:`BufferPool`, ``None`` for a private
+        default-sized pool (lazy slabs: zero cost until the first recv), or
+        ``False`` to disable pooling (legacy fresh ``bytearray`` per
+        frame)."""
         self._sock = sock
         self._lock = threading.Lock()
         self._rlock = threading.Lock()
         self._broken = False
+        self._hdr = bytearray(8)    # reusable length-prefix scratch
+        if isinstance(pool, BufferPool):
+            self.recv_pool: Optional[BufferPool] = pool
+        else:
+            self.recv_pool = BufferPool(name="tcp-recv") if pool is None \
+                else None
 
     @property
     def broken(self) -> bool:
         return self._broken
 
     @staticmethod
-    def connect(host: str, port: int, timeout: float = 10.0) -> "TCPChannel":
+    def connect(host: str, port: int, timeout: float = 10.0,
+                pool=None) -> "TCPChannel":
         sock = socket.create_connection((host, port), timeout=timeout)
         sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         sock.settimeout(None)       # connect timeout must not leak to I/O
-        return TCPChannel(sock)
+        return TCPChannel(sock, pool=pool)
 
     def send(self, data) -> None:
         if self._broken:
@@ -357,15 +410,18 @@ class TCPChannel(Channel):
         return bool(r), bool(w)
 
     def recv(self, timeout: Optional[float] = None):
-        """Receive one frame into a fresh preallocated buffer.
+        """Receive one frame into pooled slab memory (returned as a
+        ``BufferLease`` — steady state: zero payload-buffer allocations per
+        frame) or, with pooling disabled, a fresh ``bytearray``.
 
         The per-call timeout is armed with SO_RCVTIMEO (receive direction
         only — a concurrent ``send`` on this full-duplex socket must not
         inherit it) and disarmed afterwards; where SO_RCVTIMEO is
         unavailable it falls back to ``settimeout`` with restore.  A timeout
         *mid-frame* leaves the stream unframeable, so the channel is failed
-        cleanly: marked broken and closed; only a timeout before the first
-        length byte is retryable."""
+        cleanly: marked broken and closed (and the partial frame's lease
+        released); only a timeout before the first length byte is
+        retryable."""
         with self._rlock:
             if self._broken:
                 raise ChannelClosed("channel failed on a previous partial frame")
@@ -375,7 +431,7 @@ class TCPChannel(Channel):
                 prev = self._sock.gettimeout()
                 self._sock.settimeout(timeout)
             try:
-                hdr = bytearray(8)
+                hdr = self._hdr     # safe to reuse: recv serialized by _rlock
                 try:
                     _recv_into_exact(self._sock, memoryview(hdr))
                 except _PartialRead as e:
@@ -385,14 +441,19 @@ class TCPChannel(Channel):
                     raise TimeoutError(
                         f"tcp recv timeout mid-header ({e.got}/8B); channel failed")
                 (n,) = struct.unpack("<Q", hdr)
-                buf = bytearray(n)
+                lease = (self.recv_pool.acquire(n)
+                         if self.recv_pool is not None else None)
+                buf = lease.view if lease is not None else memoryview(
+                    bytearray(n))
                 try:
-                    _recv_into_exact(self._sock, memoryview(buf))
+                    _recv_into_exact(self._sock, buf)
                 except _PartialRead as e:
+                    if lease is not None:
+                        lease.release()
                     self._fail()
                     raise TimeoutError(
                         f"tcp recv timeout mid-frame ({e.got}/{n}B); channel failed")
-                return buf
+                return lease if lease is not None else buf.obj
             finally:
                 if not self._broken:
                     try:
@@ -426,11 +487,33 @@ class TCPServer:
     frame is a local memcpy away; an in-process read-ahead thread was
     measured to LOSE throughput to GIL contention with the handler.  Client
     threads are reaped as connections finish (no unbounded growth) and
-    ``stop()`` joins the live ones with a timeout."""
+    ``stop()`` joins the live ones with a timeout.
+
+    Each connection receives into its own :class:`BufferPool` (serial loop:
+    a small ring suffices) and the loop releases the request lease after
+    the response is written — a handler that must hold request bytes past
+    its return (the executor's coalescer) ``retain``s them.  Pass
+    ``recv_pool=False`` for the legacy per-frame allocation;
+    ``pool_stats()`` aggregates the live connections' pool counters."""
 
     def __init__(self, handler: Callable, host: str = "127.0.0.1",
-                 port: int = 0, join_timeout: float = 2.0) -> None:
+                 port: int = 0, join_timeout: float = 2.0, *,
+                 recv_pool: bool = True,
+                 pool_slab_bytes: Optional[int] = None,
+                 pool_slabs: Optional[int] = None) -> None:
         self._handler = handler
+        self.recv_pool = recv_pool
+        self._pool_kw = {}
+        if pool_slab_bytes is not None:
+            self._pool_kw["slab_bytes"] = int(pool_slab_bytes)
+        if pool_slabs is not None:
+            self._pool_kw["slabs"] = int(pool_slabs)
+        self._pools: list[BufferPool] = []
+        # counters of reaped (closed + fully released) connection pools, so
+        # pool_stats() stays lifetime-accurate without retaining every dead
+        # connection's slab memory forever
+        self._pool_totals = {"pools": 0, "acquired": 0, "released": 0,
+                             "hits": 0, "misses": 0, "wraps": 0}
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind((host, port))
@@ -469,12 +552,59 @@ class TCPServer:
                 self._conns.append(conn)
             t.start()
 
+    def _reap_pools(self) -> None:
+        """Fold closed connections' fully-released pools into the lifetime
+        totals and drop them — retaining every dead connection's slab
+        memory would grow without bound under connection churn.  A closed
+        pool with leases still outstanding (pins awaiting GC) is kept and
+        retried on the next sweep."""
+        with self._lock:
+            keep = []
+            for p in self._pools:
+                if p.retired and p.outstanding() == 0:
+                    s = p.stats()
+                    self._pool_totals["pools"] += 1
+                    for k in ("acquired", "released", "hits", "misses",
+                              "wraps"):
+                        self._pool_totals[k] += s[k]
+                else:
+                    keep.append(p)
+            self._pools = keep
+
+    def pool_stats(self) -> dict:
+        """Aggregated recv-pool counters across this server's connections
+        (lifetime: live pools plus reaped closed ones) — the lease-balance
+        observability hook the leak tests assert on."""
+        self._reap_pools()
+        with self._lock:
+            pools = list(self._pools)
+            agg: dict = dict(self._pool_totals)
+        agg["pools"] += len(pools)
+        agg["outstanding"] = 0
+        for p in pools:
+            s = p.stats()
+            for k in ("acquired", "released", "outstanding", "hits",
+                      "misses", "wraps"):
+                agg[k] += s[k]
+        agg["hit_rate"] = (agg["hits"] / agg["acquired"]) if agg["acquired"] \
+            else 1.0
+        return agg
+
     def _client(self, conn: socket.socket) -> None:
         conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        pool = None
+        if self.recv_pool:
+            pool = BufferPool(name=f"conn-{conn.fileno()}", **self._pool_kw)
+            with self._lock:
+                self._pools.append(pool)
+        hdr = bytearray(8)          # per-connection: zero allocs per frame
         try:
             while not self._stop.is_set():
-                req = _recv_frame(conn)
-                _send_frame(conn, self._handler(req))
+                req = _recv_frame(conn, pool, hdr)
+                try:
+                    _send_frame(conn, self._handler(req))
+                finally:
+                    release_buffer(req)
         except ProtocolError as e:
             # garbled stream: no addressable response is possible — drop the
             # connection and say so, instead of stranding the peer's futures
@@ -487,6 +617,9 @@ class TCPServer:
                 if conn in self._conns:
                     self._conns.remove(conn)
             conn.close()
+            if pool is not None:
+                pool.retired = True
+            self._reap_pools()
 
     def stop(self) -> None:
         self._stop.set()

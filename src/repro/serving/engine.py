@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.executor import TenantThrottled, _throttle_backoff
+from repro.core.memory import detach_tree
 from repro.models import model as M
 
 
@@ -189,17 +190,25 @@ class PipelinedOffloadFrontend:
     inside ``HostRuntime.run``; on the pipelined path a raw :meth:`submit`
     future surfaces it, and :meth:`map`'s gather owns the jittered
     re-submit loop (bounded by the runtime's ``throttle_retries``) so a
-    fan-out over a capped tenant degrades to backoff, not failure."""
+    fan-out over a capped tenant degrades to backoff, not failure.
+
+    ``detach_results=True`` hands gathered results back as owning copies,
+    releasing recv-pool lease pins at materialization time — the frontend
+    analogue of the session-layer knob (a serving caller that buffers many
+    responses must not pin the runtime's recv slabs; zero-copy views are
+    the default)."""
 
     def __init__(self, runtime, fp: str, fn: str, *,
                  batchable: bool = False, tenant: Optional[str] = None,
-                 qos: Optional[dict] = None) -> None:
+                 qos: Optional[dict] = None,
+                 detach_results: bool = False) -> None:
         self.runtime = runtime
         self.fp = fp
         self.fn = fn
         self.batchable = batchable
         self.tenant = tenant
         self.qos = qos
+        self.detach_results = detach_results
         self.submitted = 0
         self._pool: Optional[ThreadPoolExecutor] = None
 
@@ -217,12 +226,19 @@ class PipelinedOffloadFrontend:
             inner = self.runtime.run_async(self.fp, self.fn, args,
                                            batchable=self.batchable,
                                            tenant=self.tenant, qos=self.qos)
-            return self.runtime.chain(inner, lambda meta, tree: tree)
+            return self.runtime.chain(inner, self._materialize)
         if self._pool is None:
             self._pool = ThreadPoolExecutor(max_workers=1)
-        return self._pool.submit(self.runtime.run, self.fp, self.fn, args,
-                                 batchable=self.batchable,
-                                 tenant=self.tenant, qos=self.qos)
+        return self._pool.submit(self._run_sync, args)
+
+    def _materialize(self, meta: dict, tree: Any) -> Any:
+        return detach_tree(tree) if self.detach_results else tree
+
+    def _run_sync(self, args: Any) -> Any:
+        out = self.runtime.run(self.fp, self.fn, args,
+                               batchable=self.batchable,
+                               tenant=self.tenant, qos=self.qos)
+        return self._materialize({}, out)
 
     def map(self, requests: dict) -> dict:
         """Submit ``{rid: args}`` keeping the pipeline full; gather all.

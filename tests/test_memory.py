@@ -1,0 +1,522 @@
+"""Pooled-memory data plane: BufferPool slab/ring mechanics, BufferLease
+lifecycle invariants across every consumer layer (pipelined out-of-order
+completion, coalesced batch dispatch, TenantThrottled retry, mid-stream
+failover), ring wraparound under forced partial reads, and the unified
+channel timeout/closure semantics."""
+import gc
+import socket
+import struct
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.executor import (DestinationExecutor, HostRuntime,
+                                 PipelinedHostRuntime)
+from repro.core.memory import (BufferLease, BufferPool, PooledView,
+                               detach_tree, release_buffer)
+from repro.core.serialization import (DataTransfer, frame_request_id,
+                                      pack_message, unpack_message)
+from repro.core.transport import (ChannelClosed, DirectChannel,
+                                  LoopbackChannel, TCPChannel, TCPServer,
+                                  _recv_frame)
+
+
+def _drained(outstanding_fn, deadline_s: float = 5.0) -> int:
+    """Poll ``outstanding_fn`` to zero, giving the GC a chance to fire the
+    leaf-view pin finalizers (futures/jax sometimes hold cycles)."""
+    deadline = time.monotonic() + deadline_s
+    while True:
+        gc.collect()
+        n = outstanding_fn()
+        if n == 0 or time.monotonic() >= deadline:
+            return n
+        time.sleep(0.02)
+
+
+def _tiny_library():
+    def double(params, state, args):
+        return {"y": np.asarray(args["x"]) * 2.0}
+
+    def slow(params, state, args):
+        time.sleep(0.02)
+        return {"y": np.asarray(args["x"]) + 1.0}
+
+    return {"double": double, "slow": slow}
+
+
+# ---------------------------------------------------------------------------
+# pool mechanics
+# ---------------------------------------------------------------------------
+
+def test_pool_carve_wrap_and_recycle():
+    pool = BufferPool(slab_bytes=100, slabs=2)
+    a = pool.acquire(60)
+    b = pool.acquire(30)            # same slab (60 + 30 <= 100)
+    assert pool.stats()["slabs"] == 1 and pool.hits == 2
+    c = pool.acquire(60)            # doesn't fit the tail: second slab
+    assert pool.stats()["slabs"] == 2
+    d = pool.acquire(60)            # both slabs pinned: counted fallback
+    assert pool.miss_exhausted == 1 and not d.pooled
+    a.release()
+    b.release()
+    e = pool.acquire(80)            # slab 0 fully released: wraps onto it
+    assert e.pooled and pool.wraps >= 1
+    for lease in (c, d, e):
+        lease.release()
+    assert pool.outstanding() == 0
+    s = pool.stats()
+    assert s["acquired"] == s["released"] == 5
+
+
+def test_pool_oversize_falls_back_counted():
+    pool = BufferPool(slab_bytes=64, slabs=2)
+    lease = pool.acquire(1000)
+    assert not lease.pooled and pool.miss_oversize == 1
+    assert len(lease) == 1000
+    lease.view[:4] = b"abcd"
+    assert bytes(lease)[:4] == b"abcd"
+    lease.release()
+    assert pool.outstanding() == 0
+
+
+def test_lease_quacks_like_bytes():
+    pool = BufferPool(slab_bytes=64, slabs=1)
+    lease = pool.acquire(5)
+    lease.view[:] = b"hello"
+    assert len(lease) == 5
+    assert bytes(lease) == b"hello" and lease.to_bytes() == b"hello"
+    assert lease == b"hello" and lease[1] == b"hello"[1]
+    assert lease[::-1] == b"olleh"
+    lease.release()
+
+
+def test_lease_refcounts_and_over_release():
+    pool = BufferPool(slab_bytes=64, slabs=1)
+    lease = pool.acquire(8)
+    lease.retain()
+    lease.release()
+    assert pool.outstanding() == 1      # one ref left
+    lease.release()
+    assert pool.outstanding() == 0 and lease.released
+    lease.release()                     # extra release: counted, not fatal
+    assert pool.over_released == 1
+    with pytest.raises(RuntimeError):
+        lease.retain()                  # resurrection is a bug
+    release_buffer(b"not a lease")      # no-op on plain buffers
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_pool_pattern_integrity_random(seed):
+    """Property: under random acquire/release traffic, every *live* lease's
+    bytes stay intact (no region is ever handed out twice concurrently),
+    and the pool balances at teardown."""
+    rng = np.random.default_rng(seed)
+    pool = BufferPool(slab_bytes=256, slabs=3)
+    live: list[tuple[BufferLease, bytes]] = []
+    for step in range(400):
+        if live and rng.random() < 0.45:
+            i = int(rng.integers(0, len(live)))
+            lease, pattern = live.pop(i)
+            assert bytes(lease) == pattern
+            lease.release()
+        else:
+            n = int(rng.integers(0, 300))   # includes oversize (>256)
+            lease = pool.acquire(n)
+            pattern = bytes(rng.integers(0, 256, n, dtype=np.uint8))
+            lease.view[:] = pattern
+            live.append((lease, pattern))
+        for lease, pattern in live:
+            assert bytes(lease) == pattern
+    for lease, pattern in live:
+        assert bytes(lease) == pattern
+        lease.release()
+    assert pool.outstanding() == 0
+    s = pool.stats()
+    assert s["acquired"] == s["released"] > 0
+
+
+# ---------------------------------------------------------------------------
+# ring wraparound under forced partial reads
+# ---------------------------------------------------------------------------
+
+class _TrickleRecvSocket:
+    """recv_into hands out a pseudo-random few bytes per call — frames fill
+    leased slab regions across many partial reads."""
+
+    def __init__(self, wire: bytes, seed: int) -> None:
+        self.wire = memoryview(wire)
+        self.pos = 0
+        self.rng = np.random.default_rng(seed)
+
+    def recv_into(self, view, n):
+        left = len(self.wire) - self.pos
+        assert left > 0, "test read past the prepared wire"
+        k = min(int(self.rng.integers(1, 7)), n, left)
+        view[:k] = self.wire[self.pos:self.pos + k]
+        self.pos += k
+        return k
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_ring_wraparound_under_partial_reads(seed):
+    """Frames trickled into a tiny ring must wrap cleanly: held leases keep
+    their bytes while later frames recycle released slabs around them."""
+    rng = np.random.default_rng(seed)
+    payloads = [bytes(rng.integers(0, 256, int(rng.integers(1, 90)),
+                                   dtype=np.uint8)) for _ in range(12)]
+    wire = b"".join(struct.pack("<Q", len(p)) + p for p in payloads)
+    sock = _TrickleRecvSocket(wire, seed)
+    pool = BufferPool(slab_bytes=128, slabs=2)
+    hdr = bytearray(8)
+    held: list[tuple[BufferLease, bytes]] = []
+    for i, payload in enumerate(payloads):
+        lease = _recv_frame(sock, pool, hdr)
+        assert bytes(lease) == payload
+        held.append((lease, payload))
+        # earlier held frames must be untouched by later carving/wraps
+        for h, p in held:
+            assert bytes(h) == p
+        if len(held) > 2:               # keep 2 pinned across wraps
+            h, p = held.pop(0)
+            assert bytes(h) == p
+            h.release()
+    for h, p in held:
+        assert bytes(h) == p
+        h.release()
+    assert pool.outstanding() == 0
+    s = pool.stats()
+    assert s["acquired"] == s["released"] == len(payloads)
+    assert s["wraps"] >= 1              # the ring actually wrapped
+
+
+# ---------------------------------------------------------------------------
+# unpack pins the lease; copy=True detaches eagerly
+# ---------------------------------------------------------------------------
+
+def _leased_frame(pool, tree, meta=None):
+    frame = bytes(pack_message(meta or {"ok": True}, tree))
+    lease = pool.acquire(len(frame))
+    lease.view[:] = frame
+    return lease
+
+
+def test_unpack_views_pin_lease_until_collected():
+    pool = BufferPool(slab_bytes=1024, slabs=1)
+    lease = _leased_frame(pool, {"x": np.arange(8, dtype=np.float32)})
+    meta, out = unpack_message(lease)
+    assert isinstance(out["x"], PooledView)
+    with pytest.raises(ValueError):
+        out["x"][0] = 1.0               # decoded views are read-only
+    lease.release()                     # transport's base ref gone...
+    assert pool.outstanding() == 1      # ...but the leaf view pins it
+    blocked = pool.acquire(900)         # slab pinned: counted fallback
+    assert not blocked.pooled and pool.miss_exhausted == 1
+    blocked.release()
+    kept = np.array(out["x"])           # owning copy survives the release
+    del out, meta
+    assert _drained(pool.outstanding) == 0
+    recycled = pool.acquire(900)        # slab reusable again
+    assert recycled.pooled
+    recycled.release()
+    np.testing.assert_array_equal(kept, np.arange(8, dtype=np.float32))
+
+
+def test_unpack_copy_true_detaches_eagerly():
+    pool = BufferPool(slab_bytes=1024, slabs=1)
+    lease = _leased_frame(pool, {"x": np.arange(8, dtype=np.float32)})
+    _, out = unpack_message(lease, copy=True)
+    lease.release()
+    assert pool.outstanding() == 0      # no pins: slab free immediately
+    out["x"][0] = -1.0                  # and the copy is writable
+    assert pool.acquire(900).pooled
+
+
+def test_derived_views_keep_the_pin():
+    """np.asarray / slicing must not drop the lease pin (numpy base-chain
+    collapsing is exactly the hazard PooledView exists for)."""
+    pool = BufferPool(slab_bytes=1024, slabs=1)
+    lease = _leased_frame(pool, {"x": np.arange(16, dtype=np.float32)})
+    _, out = unpack_message(lease)
+    sliced = np.asarray(out["x"]).reshape(4, 4)[1:3]
+    lease.release()
+    del out
+    assert _drained(pool.outstanding, deadline_s=1.0) == 1  # slice pins
+    np.testing.assert_array_equal(sliced[0], np.arange(4, 8))
+    del sliced
+    assert _drained(pool.outstanding) == 0
+
+
+def test_detach_tree_copies_pooled_views_only():
+    pool = BufferPool(slab_bytes=1024, slabs=1)
+    lease = _leased_frame(pool, {"x": np.arange(4, dtype=np.float32),
+                                 "n": [np.ones(2, np.float32)],
+                                 "t": (7, "s")})
+    _, out = unpack_message(lease)
+    det = detach_tree(out)
+    assert type(det["x"]) is np.ndarray and det["t"] == (7, "s")
+    det["x"][0] = 5.0                   # owning + writable
+    lease.release()
+    del out
+    assert _drained(pool.outstanding) == 0
+    np.testing.assert_array_equal(det["n"][0], np.ones(2, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# lease lifecycle across the consumer layers (no leaks)
+# ---------------------------------------------------------------------------
+
+def test_pipelined_out_of_order_completion_balances_pool():
+    """Out-of-order responses over real TCP: every response lease is
+    released once its future's result is dropped."""
+    a, b = socket.socketpair()
+    stop = threading.Event()
+
+    def reorder_destination():
+        try:
+            reqs = [_recv_frame(b) for _ in range(6)]
+            for raw in reversed(reqs):
+                _, tree = unpack_message(raw)
+                from repro.core.transport import _send_frame
+                _send_frame(b, pack_message(
+                    {"ok": True, "compute_s": 1e-4},
+                    {"y": np.asarray(tree["x"]) * 10.0},
+                    request_id=frame_request_id(raw)))
+        except (ChannelClosed, OSError):
+            pass
+
+    t = threading.Thread(target=reorder_destination, daemon=True)
+    t.start()
+    rt = PipelinedHostRuntime(TCPChannel(a), max_in_flight=8, timeout=30)
+    pool = rt.channel.recv_pool
+    futs = [rt.submit({"op": "noop"}, {"x": np.full(64, i, np.float32)})
+            for i in range(6)]
+    for i, f in enumerate(futs):
+        _, out = rt.wait(f, timeout=30)
+        np.testing.assert_array_equal(out["y"], np.full(64, 10.0 * i))
+        del out
+    del futs, f                 # futures hold their results (and pins)
+    t.join(timeout=5)
+    stop.set()
+    assert _drained(pool.outstanding) == 0
+    s = pool.stats()
+    assert s["acquired"] == s["released"] == 6
+    assert s["hit_rate"] == 1.0
+    rt.close()
+    b.close()
+
+
+def test_coalesced_batch_dispatch_releases_server_leases():
+    """Coalescer-queued requests retain their recv lease past the serial
+    connection loop's release and drop it after batch dispatch — server
+    pools balance with a real micro-batch having formed."""
+    ex = DestinationExecutor({"tiny": _tiny_library()}, coalesce=True,
+                             coalesce_window_s=0.25, max_coalesce=8)
+    server = TCPServer(ex.handle).start()
+    rts = [HostRuntime(TCPChannel.connect("127.0.0.1", server.port))
+           for _ in range(6)]
+    rts[0].put_model("fp", "tiny", {"w": np.zeros(1, np.float32)})
+    results = [None] * 6
+    barrier = threading.Barrier(6)
+
+    def worker(i):
+        barrier.wait()
+        results[i] = rts[i].run("fp", "double",
+                                {"x": np.full((1, 3), i, np.float32)},
+                                batchable=True)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(6)]
+    [t.start() for t in threads]
+    [t.join(timeout=30) for t in threads]
+    for i in range(6):
+        np.testing.assert_array_equal(results[i]["y"],
+                                      np.full((1, 3), 2.0 * i))
+    assert ex.coalesce_stats["max_batch"] >= 2
+    assert _drained(lambda: server.pool_stats()["outstanding"]) == 0
+    ps = server.pool_stats()
+    assert ps["acquired"] == ps["released"] > 0 and ps["hits"] > 0
+    for rt in rts:
+        rt.close()
+    server.stop()
+    ex.shutdown()
+
+
+def test_tenant_throttled_retry_balances_pools():
+    """Throttled responses (and their retries) must release every lease on
+    both sides — host runtimes and the destination's connection pools."""
+    ex = DestinationExecutor({"tiny": _tiny_library()},
+                             tenant_max_inflight=1)
+    server = TCPServer(ex.handle).start()
+    rts = [HostRuntime(TCPChannel.connect("127.0.0.1", server.port),
+                       throttle_retries=10) for _ in range(3)]
+    rts[0].put_model("fp", "tiny", {"w": np.zeros(1, np.float32)})
+    barrier = threading.Barrier(3)
+    errs = []
+
+    def worker(i):
+        barrier.wait()
+        try:
+            for _ in range(4):
+                rts[i].run("fp", "slow", {"x": np.zeros(8, np.float32)},
+                           tenant="acme")
+        except Exception as e:  # noqa: BLE001 — fail the test, don't hang
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(3)]
+    [t.start() for t in threads]
+    [t.join(timeout=60) for t in threads]
+    assert not errs
+    assert ex.tenant_stats["acme"]["throttled"] > 0     # backpressure hit
+    host_pools = [rt.channel.recv_pool for rt in rts]
+    assert _drained(
+        lambda: sum(p.outstanding() for p in host_pools)) == 0
+    assert _drained(lambda: server.pool_stats()["outstanding"]) == 0
+    for p in host_pools:
+        s = p.stats()
+        assert s["acquired"] == s["released"] > 0
+    for rt in rts:
+        rt.close()
+    server.stop()
+
+
+def test_failover_midstream_balances_pools():
+    """Mid-stream destination death: the re-routed session must not leak
+    leases on the dead channel's pool, and the survivor's pools balance."""
+    from repro import avec
+
+    ex_a = DestinationExecutor({"tiny": _tiny_library()}, name="a")
+    ex_b = DestinationExecutor({"tiny": _tiny_library()}, name="b")
+    srv_a = TCPServer(ex_a.handle).start()
+    srv_b = TCPServer(ex_b.handle).start()
+    cfg = {"model": "tiny"}
+    params = {"w": np.zeros(1, np.float32)}
+    with avec.connect([f"tcp://127.0.0.1:{srv_a.port}",
+                       f"tcp://127.0.0.1:{srv_b.port}"],
+                      shadow_every=0) as client:
+        first = client.destinations[0]
+        sess = client.session(cfg, params, "tiny", destination=first)
+        out = sess.call("double", {"x": np.ones((1, 2), np.float32)})
+        np.testing.assert_array_equal(out["y"], np.full((1, 2), 2.0))
+        del out
+        pools = [client.runtime(n).channel.recv_pool
+                 for n in client.destinations]
+        srv_a.stop()                    # node death, not an app error
+        out = sess.call("double", {"x": np.full((1, 2), 3.0, np.float32)})
+        np.testing.assert_array_equal(out["y"], np.full((1, 2), 6.0))
+        del out
+        assert sess.destination != first
+        pools.append(client.runtime(sess.destination).channel.recv_pool)
+        assert _drained(
+            lambda: sum(p.outstanding() for p in pools)) == 0
+        assert _drained(lambda: srv_b.pool_stats()["outstanding"]) == 0
+    srv_b.stop()
+
+
+def test_detach_results_session_and_frontend():
+    """detach_results hands owning arrays end to end (session + pipelined
+    frontend), leaving pools balanced without waiting on GC."""
+    from repro.core.interception import AvecSession
+    from repro.serving.engine import PipelinedOffloadFrontend
+
+    ex = DestinationExecutor({"tiny": _tiny_library()})
+    server = TCPServer(ex.handle).start()
+    rt = PipelinedHostRuntime(TCPChannel.connect("127.0.0.1", server.port))
+    sess = AvecSession({"m": 1}, {"w": np.zeros(1, np.float32)}, rt, "tiny",
+                       detach_results=True)
+    out = sess.call("double", {"x": np.ones((1, 2), np.float32)})
+    assert type(out["y"]) is np.ndarray     # detached, not a PooledView
+    out["y"][0, 0] = 9.0                    # and writable
+    fe = PipelinedOffloadFrontend(rt, sess.fp, "double",
+                                  detach_results=True)
+    outs = fe.map({f"r{i}": {"x": np.full((1, 2), i, np.float32)}
+                   for i in range(4)})
+    for i in range(4):
+        assert type(outs[f"r{i}"]["y"]) is np.ndarray
+        np.testing.assert_array_equal(outs[f"r{i}"]["y"],
+                                      np.full((1, 2), 2.0 * i))
+    pool = rt.channel.recv_pool
+    assert _drained(pool.outstanding) == 0
+    rt.close()
+    server.stop()
+
+
+def test_server_reaps_closed_connection_pools():
+    """Connection churn must not accumulate dead per-connection pools (and
+    their slab memory) — closed, fully-released pools fold into the
+    lifetime totals and are dropped."""
+    server = TCPServer(lambda req: req).start()
+    for i in range(6):
+        ch = TCPChannel.connect("127.0.0.1", server.port, pool=False)
+        assert bytes(ch.request(b"hi", timeout=5)) == b"hi"
+        ch.close()
+    deadline = time.monotonic() + 5.0
+    while time.monotonic() < deadline:
+        server.pool_stats()             # sweeps
+        with server._lock:
+            if not server._pools:
+                break
+        time.sleep(0.05)
+    with server._lock:
+        assert not server._pools        # all dead pools reaped
+    ps = server.pool_stats()            # ...but their counters survive
+    assert ps["pools"] == 6
+    assert ps["acquired"] == ps["released"] == 6
+    assert ps["outstanding"] == 0 and ps["hit_rate"] == 1.0
+    server.stop()
+
+
+# ---------------------------------------------------------------------------
+# unified channel timeout/closure semantics (satellite)
+# ---------------------------------------------------------------------------
+
+def test_loopback_timeout_and_closure_match_tcp_types():
+    a, b = LoopbackChannel.pair()
+    with pytest.raises(TimeoutError):
+        b.recv(timeout=0.02)
+    a.send(b"x")
+    assert b.recv(timeout=1) == b"x"
+    a.close()
+    with pytest.raises(ChannelClosed):
+        b.recv(timeout=1)
+    with pytest.raises(ChannelClosed):
+        b.recv(timeout=1)               # closure is sticky, not one-shot
+    with pytest.raises(ChannelClosed):
+        a.send(b"y")
+    b.close()
+    with pytest.raises(ChannelClosed):
+        b.recv(timeout=1)               # locally-closed side also raises
+
+
+def test_direct_channel_close_raises_channel_closed():
+    ex = DestinationExecutor({"tiny": _tiny_library()})
+    ch = DirectChannel(ex)
+    req = pack_message({"op": "ping"}, None)
+    assert unpack_message(ch.request(req))[0]["ok"]
+    ch.close()
+    with pytest.raises(ChannelClosed):
+        ch.request(req)
+
+
+# ---------------------------------------------------------------------------
+# DataTransfer thread safety (satellite)
+# ---------------------------------------------------------------------------
+
+def test_data_transfer_concurrent_records_lose_nothing():
+    dt = DataTransfer()
+    n_threads, per = 8, 2000
+    barrier = threading.Barrier(n_threads)
+
+    def worker(i):
+        barrier.wait()
+        for _ in range(per):
+            dt.record(1, "sent" if i % 2 else "received",
+                      category=f"c{i % 2}")
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_threads)]
+    [t.start() for t in threads]
+    [t.join(timeout=30) for t in threads]
+    assert dt.total == n_threads * per
+    assert dt.sent == dt.received == n_threads * per // 2
+    assert dt.by_category["c0"] == dt.by_category["c1"] == n_threads * per // 2
