@@ -546,6 +546,78 @@ def tenant_fairness_probe(weight_a: float = 3.0, weight_b: float = 1.0,
     }
 
 
+def drain_rehome_probe(n_steady: int = 200, n_drain: int = 200,
+                       compute_s: float = 0.002,
+                       p99_ratio_bound: float = 2.0) -> dict:
+    """Zero-downtime drain probe (the CI drain gate).
+
+    One session streams fixed-cost calls at a two-destination facade pool
+    with warm shadow replication on.  Mid-stream the primary's admission
+    gate flips (the ``drain`` control op): the next call bounces typed, the
+    session promotes its warm standby, and the stream continues.  The probe
+    records per-call latency in the steady window vs the drain window (which
+    CONTAINS the bounce + re-home call) plus whether any call was dropped.
+    Acceptance: zero dropped calls, drain-window p99 <= ``p99_ratio_bound``
+    x steady p99, a warm (no state rebuild) re-home, and the drained node
+    bleeding to zero pending."""
+    from repro import avec
+    from repro.core.executor import DestinationExecutor
+
+    def work(params, state, args):
+        time.sleep(compute_s)
+        return {"y": np.asarray(args["x"]) + 1.0}
+
+    executors = {n: DestinationExecutor({"tiny": {"work": work}}, name=n)
+                 for n in ("prim", "stby")}
+    cfg = {"arch": "drain-probe"}
+    params = {"w": np.zeros(1, np.float32)}
+    x = {"x": np.zeros((1, 2), np.float32)}
+
+    def p99(lat: list) -> float:
+        s = sorted(lat)
+        return s[min(int(0.99 * len(s)), len(s) - 1)] if s else float("inf")
+
+    dropped = 0
+    lat_steady: list = []
+    lat_drain: list = []
+    with avec.connect(list(executors.values())) as client:
+        sess = client.session(cfg, params, "tiny", destination="prim")
+        for lat in (lat_steady, lat_drain):
+            n = n_steady if lat is lat_steady else n_drain
+            for _ in range(n):
+                t0 = time.perf_counter()
+                try:
+                    sess.call("work", x)
+                except Exception:  # noqa: BLE001 — a drop is the failure mode
+                    dropped += 1
+                    continue
+                lat.append(time.perf_counter() - t0)
+            if lat is lat_steady:
+                # flip mid-stream: the NEXT call eats the bounce + re-home
+                client.runtime("prim").drain()
+        bleed = executors["prim"].drain(timeout_s=5.0)
+        rehome = dict(sess.last_rehome or {})
+        destination = sess.destination
+    for ex in executors.values():
+        ex.shutdown()
+    steady_p99, drain_p99 = p99(lat_steady), p99(lat_drain)
+    ratio = drain_p99 / steady_p99 if steady_p99 > 0 else float("inf")
+    return {
+        "calls_steady": n_steady,
+        "calls_drain_window": n_drain,
+        "dispatch_compute_s": compute_s,
+        "dropped": dropped,
+        "steady_p99_s": steady_p99,
+        "drain_p99_s": drain_p99,
+        "p99_ratio": ratio,
+        "p99_ratio_bound": p99_ratio_bound,
+        "within_bound": ratio <= p99_ratio_bound,
+        "rehome": rehome,
+        "destination_after": destination,
+        "drained_node_bled": bleed,
+    }
+
+
 def _coalesce_walls(clients: int = 8, reps: int = 4) -> tuple[float, float, dict]:
     """(uncoalesced_wall_s, coalesced_wall_s, stats) for N concurrent clients
     hitting one destination with batchable matmul requests."""
@@ -610,6 +682,7 @@ def dataplane_report(frames: int = 8, in_flight: int = 4) -> dict:
     t_plain, t_coal, stats = _coalesce_walls()
     fairness = tenant_fairness_probe()
     ring = recv_ring_probe()
+    drain = drain_rehome_probe()
     return {
         "serialize_raw_512x512": {
             "payload_bytes": nb,
@@ -633,6 +706,7 @@ def dataplane_report(frames: int = 8, in_flight: int = 4) -> dict:
         "backpressure_small_sockbuf": bp,
         "recv_ring_buffer": ring,
         "tenant_fairness_2way": fairness,
+        "drain_rehome": drain,
         "coalesced_dispatch": {
             "clients": 8, "reps": 4,
             "uncoalesced_wall_s": t_plain,

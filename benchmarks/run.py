@@ -120,6 +120,14 @@ def main() -> None:
                          tf["b_p95_s"] * 1e3,
                          f"bound {tf['p95_bound_s'] * 1e3:.0f}ms "
                          f"(low-weight tenant not starved)"))
+            dr = report["drain_rehome"]
+            rows.append(("dataplane/drain_rehome_p99_ratio",
+                         dr["p99_ratio"],
+                         f"drain p99 {dr['drain_p99_s'] * 1e3:.1f}ms vs "
+                         f"steady {dr['steady_p99_s'] * 1e3:.1f}ms "
+                         f"(bound {dr['p99_ratio_bound']:.0f}x, "
+                         f"dropped={dr['dropped']}, "
+                         f"warm={dr['rehome'].get('warm')})"))
         except Exception:  # noqa: BLE001
             traceback.print_exc()
             rows.append(("dataplane/ERROR", 0.0, "see traceback"))

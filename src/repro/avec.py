@@ -46,17 +46,22 @@ extraction, replacing the deprecated positional ``args[2]`` convention.
 """
 from __future__ import annotations
 
+import itertools
 import threading
+import time
+import uuid
 from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
 
+from repro.core.cache import model_fingerprint
+from repro.core.cluster import ClusterMembership, ReplicaGroup
 from repro.core.costmodel import Workload
-from repro.core.executor import (DestinationExecutor, HostRuntime,
-                                 PipelinedHostRuntime, RemoteError,
-                                 TenantThrottled)
+from repro.core.executor import (DestinationDraining, DestinationExecutor,
+                                 HostRuntime, PipelinedHostRuntime,
+                                 RemoteError, TenantThrottled)
 from repro.core.interception import (ArgSpec, AvecSession,
                                      InterceptionLibrary)
 from repro.core.migration import MigrationManager, SessionShadow
@@ -72,7 +77,7 @@ from repro.serving.engine import (PipelinedOffloadFrontend,
 __all__ = [
     "connect", "AvecClient", "ClientSession", "ConnectPolicy", "Endpoint",
     "Capabilities", "HandshakeError", "ArgSpec", "PROTOCOL_VERSION",
-    "QoS", "TenantThrottled",
+    "QoS", "TenantThrottled", "DestinationDraining",
 ]
 
 
@@ -129,6 +134,9 @@ class Capabilities:
     fair_drain: bool = False
     tenant_stats: dict = field(default_factory=dict)
     tenant_limits: dict = field(default_factory=dict)
+    #: the endpoint is bleeding its queues for a zero-downtime exit: alive
+    #: (snapshot/restore/ping still served) but not admitting new work
+    draining: bool = False
     raw: dict = field(default_factory=dict, compare=False)
 
     @staticmethod
@@ -145,6 +153,7 @@ class Capabilities:
             fair_drain=bool(reply.get("fair_drain", False)),
             tenant_stats=dict(reply.get("tenant_stats", {})),
             tenant_limits=dict(reply.get("tenant_limits", {})),
+            draining=bool(reply.get("draining", False)),
             raw=dict(reply))
 
 
@@ -164,6 +173,18 @@ class ConnectPolicy:
     #: see repro.core.memory for the lease contract)
     detach_results: bool = False
     failover: bool = True           # transparent re-route on node death
+    #: proactive failure domain: keep a warm standby per session (scheduler
+    #: picked, model made resident ahead of time, every host shadow snapshot
+    #: replicated to it) so failover/drain re-home is a promotion, not a
+    #: rebuild.  Needs ``failover`` + a shadow (``shadow_every > 0``) + a
+    #: second servable destination; degrades silently to reactive failover
+    #: otherwise.
+    warm_standby: bool = True
+    #: session placement: "scheduler" (cost-model pick, the default) or
+    #: "hash" (consistent-hash of tenant:fingerprint onto the routable
+    #: ring — sticky placement where membership churn moves only the
+    #: affected arc; the scheduler still picks the standby)
+    placement: str = "scheduler"
     #: snapshot the destination's mutable session state back to the host
     #: every N calls (0 = off).  The default (1) is correctness-first —
     #: mid-stream failover can restore the NEWEST state — but costs one
@@ -257,6 +278,10 @@ class AvecClient:
         self._siblings: dict[tuple, AvecSession] = {}
         self.migration = MigrationManager(self.registry, self.scheduler,
                                           self._runtime_for)
+        # elastic membership view over the same registry: consistent-hash
+        # ring of the routable pool, for sticky session placement and
+        # arc-bounded re-homing on membership change
+        self.cluster = ClusterMembership(self.registry)
         targets = list(targets)
         if not targets:
             raise ValueError("connect() needs at least one target")
@@ -319,6 +344,9 @@ class AvecClient:
             self.registry.register(ep.spec, channel=ch,
                                    capabilities=caps.raw)
         self.scheduler.record_capabilities(ep.name, caps.raw)
+        # an endpoint dialed (or re-dialed) mid-drain advertises it in the
+        # handshake: keep it out of routing while its queues bleed
+        self.registry.mark_draining(ep.name, caps.draining)
         if hasattr(rt, "stats"):
             self.scheduler.attach_runtime(ep.name, rt)
         return rt
@@ -363,6 +391,7 @@ class AvecClient:
         with self._lock:
             self._caps[name] = caps
         self.scheduler.record_capabilities(name, caps.raw)
+        self.registry.mark_draining(name, caps.draining)
         return caps
 
     def tenant_stats(self, name: Optional[str] = None) -> dict:
@@ -407,9 +436,26 @@ class AvecClient:
         scheduler's estimate; omitted, it is derived from the parameter
         tree."""
         w = workload or self._default_workload(lib, params)
+        if destination is None and self.policy.placement == "hash":
+            destination = self._hash_place(cfg, params, lib, tenant)
         dest = destination or self._pick_serving(w, lib, tenant)
         return ClientSession(self, cfg, params, lib, dest, tenant=tenant,
                              qos=_qos_meta(qos), workload=w, name=name)
+
+    def _hash_place(self, cfg, params, lib: str,
+                    tenant: Optional[str]) -> Optional[str]:
+        """Sticky placement: the tenant:fingerprint key lands on the
+        consistent-hash ring of the routable pool, so the same model+tenant
+        always re-homes to the same destination while membership holds, and
+        a membership change moves only the keys in the affected arc.  Walks
+        the ring preference order past destinations that don't serve
+        ``lib``; returns None (scheduler fallback) on an empty ring."""
+        key = f"{tenant or ''}:{model_fingerprint(cfg, params)}"
+        self.cluster.place(key)     # sync the ring + record the placement
+        for name in self.cluster.preference(key):
+            if self.serves(name, lib):
+                return name
+        return None
 
     def serves(self, name: str, lib: str) -> bool:
         """Whether endpoint ``name`` advertised library ``lib`` in its
@@ -528,6 +574,26 @@ class ClientSession(AvecSession):
         n = client.policy.shadow_every
         self._shadow = SessionShadow(every_n_calls=n) if n > 0 else None
         self._steps = 0
+        # client-generated logical call ids: the retry after a failover (or
+        # a drain re-home) reuses the SAME id, so a destination that already
+        # executed the original attempt answers from its replay LRU instead
+        # of double-executing — wire-level rids can't serve here because a
+        # re-dialed runtime resets them
+        self._call_ns = uuid.uuid4().hex[:8]
+        self._call_n = itertools.count(1)
+        self.rehomes = 0
+        self.last_rehome: Optional[dict] = None
+        # proactive failure domain: a warm standby replica group, fed by the
+        # host shadow's snapshot cadence (no shadow -> nothing to replicate)
+        pol = client.policy
+        self._replica: Optional[ReplicaGroup] = None
+        if (pol.failover and pol.warm_standby and self._shadow is not None
+                and len(client.destinations) > 1):
+            self._replica = ReplicaGroup(
+                self.fp, destination,
+                pick_standby=self._pick_standby,
+                runtime_for=client._runtime_for,
+                prepare=self._prepare_standby)
 
     # ------------------------------------------------------------------
     def call(self, fn: str, args: Any) -> Any:
@@ -540,28 +606,51 @@ class ClientSession(AvecSession):
         retries is NOT failover (the node is alive — it is saying no to
         this tenant specifically): the destination's live tenant stats are
         re-ingested so the scheduler penalizes it for this tenant's future
-        routing, and the typed error surfaces to the caller."""
+        routing, and the typed error surfaces to the caller.
+
+        A :class:`DestinationDraining` bounce is not failover either — the
+        node is alive but exiting: the session re-homes to its warm standby
+        (falling back to a planned live migration, which the draining node
+        still serves) and retries there.
+
+        Retries carry the SAME logical ``call_id`` as the original attempt,
+        so a destination that already executed it (failure hit the response,
+        not the request) serves the cached result instead of re-executing —
+        at-least-once delivery with replay dedup, no client-observed
+        duplicates."""
+        cid = f"{self._call_ns}-{next(self._call_n)}"
         try:
-            out = self._tracked_call(fn, args)
+            out = self._tracked_call(fn, args, cid)
         except TenantThrottled:
             try:
                 self.client.refresh_capabilities(self.destination)
             except Exception:  # noqa: BLE001 — best-effort stats refresh
                 pass
             raise
+        except DestinationDraining as e:    # before _FAILOVER_EXC: subclass
+            self._rehome_for_drain(e)
+            out = self._tracked_call(fn, args, cid)
         except self._FAILOVER_EXC as e:
             if not self._recover_same_destination():
                 self._failover_or_raise(e)
-            out = self._tracked_call(fn, args)
+            out = self._tracked_call(fn, args, cid)
         self._steps += 1
         if self._shadow is not None:
             try:
-                self._shadow.maybe_snapshot(self, self._steps)
+                fresh = self._shadow.maybe_snapshot(self, self._steps)
+                if fresh and self._replica is not None:
+                    # piggyback the snapshot onto the warm standby over the
+                    # same pooled send path (best-effort: a broken standby
+                    # is dropped and re-picked on the next snapshot)
+                    self._replica.primary = self.destination
+                    self._replica.replicate(self.fp, self._shadow.state,
+                                            self._steps)
             except self._FAILOVER_EXC:
                 pass            # shadow is best-effort; keep the last one
         return out
 
-    def _tracked_call(self, fn: str, args: Any) -> Any:
+    def _tracked_call(self, fn: str, args: Any,
+                      call_id: Optional[str] = None) -> Any:
         """One cycle with the registry's live-load counter held, so the
         scheduler's queueing (and coalescer-amortization) terms see real
         in-flight pressure from facade traffic."""
@@ -569,9 +658,102 @@ class ClientSession(AvecSession):
         dest = self.destination
         reg.acquire(dest)
         try:
-            return super().call(fn, args)
+            return super().call(fn, args, call_id=call_id)
         finally:
             reg.release(dest)
+
+    # -- proactive failure domain --------------------------------------
+    def _pick_standby(self, primary: str) -> Optional[str]:
+        """Scheduler's choice of warm standby: best routable destination
+        that serves this library, excluding the primary (None when the pool
+        has no second servable member)."""
+        unservable = tuple(n for n in self.client.destinations
+                           if not self.client.serves(n, self.lib))
+        try:
+            return self.client.scheduler.pick(
+                self.workload, exclude=(primary,) + unservable,
+                tenant=self.tenant).name
+        except NoDestinationError:
+            return None
+
+    def _prepare_standby(self, name: str) -> None:
+        """Make the model resident on the standby AHEAD of failure (send-
+        once: a fingerprint check when the standby already holds it)."""
+        self.client._sibling(self, name).ensure_model()
+
+    def _rehome_to_standby(self, reason: str) -> bool:
+        """Promote the warm standby to primary.  Warm means the standby
+        already holds the model and a replicated snapshot at least as fresh
+        as the host shadow — no state rebuild from host.  A stale standby
+        (replication fell behind) is caught up from the shadow.  The dead
+        runtime is closed only on ``failover`` — a draining node is alive
+        and its runtime may be shared with other sessions.  Returns False
+        (leaving the session untouched) when there is no standby or the
+        promotion probe fails, so callers fall through to reactive paths."""
+        if self._replica is None:
+            return False
+        self._replica.ensure_standby()
+        t0 = time.perf_counter()
+        promoted = self._replica.promote()
+        if promoted is None:
+            return False
+        name, replicated_step = promoted
+        old_rt, old_name = self.runtime, self.destination
+        warm = False
+        try:
+            fresh = self.client._runtime_for(name)
+            old_t = fresh.timeout
+            fresh.timeout = min(5.0, old_t)
+            try:
+                fresh.ping()
+            finally:
+                fresh.timeout = old_t
+            self.runtime = fresh
+            self._ready = False
+            cached = self.ensure_model()    # hit: standby was prepared
+            shadow_step = (self._shadow.snapshot_step
+                           if self._shadow is not None else -1)
+            warm = 0 <= shadow_step <= replicated_step
+            state = self._shadow.state if self._shadow is not None else None
+            if not warm and state is not None:
+                self.runtime.restore(self.fp, state)    # catch-up restore
+        except Exception:  # noqa: BLE001 — promotion is best-effort
+            self.runtime = old_rt
+            self._ready = False
+            self._replica.primary = old_name
+            return False
+        if reason == "failover":
+            try:
+                old_rt.close()  # dead node: fail its in-flight futures too
+            except Exception:  # noqa: BLE001
+                pass
+        self.destination = name
+        self._replica.primary = name
+        self.rehomes += 1
+        self.last_rehome = {"from": old_name, "to": name, "reason": reason,
+                            "warm": warm,
+                            "seconds": time.perf_counter() - t0}
+        self.client.migration.record_rehome(
+            old_name, name, warm=warm, cached=cached,
+            seconds=self.last_rehome["seconds"], reason=reason)
+        return True
+
+    def _rehome_for_drain(self, exc: DestinationDraining) -> None:
+        """The destination bounced the call because it is draining: stop
+        routing there, promote the warm standby (or fall back to a planned
+        live migration — the draining node still serves snapshot), retry is
+        the caller's."""
+        self.client.registry.mark_draining(self.destination)
+        if self._rehome_to_standby("drain"):
+            return
+        unservable = tuple(n for n in self.client.destinations
+                           if not self.client.serves(n, self.lib))
+        try:
+            self.destination = self.client.migration.migrate(
+                self, self.workload, from_name=self.destination,
+                exclude=unservable)
+        except NoDestinationError:
+            raise exc           # nowhere to go: surface the drain bounce
 
     def _recover_same_destination(self) -> bool:
         """Connection-level recovery: when only the CHANNEL died (reset,
@@ -602,9 +784,18 @@ class ClientSession(AvecSession):
                 fresh.timeout = old_t
             self.runtime = fresh
             self._ready = False
-            self.ensure_model()     # fingerprint hit if the node kept it
+            hit = self.ensure_model()   # fingerprint hit if the node kept it
             state = self._shadow.state if self._shadow is not None else None
-            if state is not None:
+            dedup = bool(self.client.capabilities(self.destination)
+                         .raw.get("replay_dedup"))
+            # a node that KEPT the session (model hit) and dedups replays
+            # must not be reset to the snapshot: if the failed call actually
+            # executed there, the same-call_id retry answers from the replay
+            # cache without re-executing, and a restored (pre-call) state
+            # would then diverge from the acknowledged result.  Restore only
+            # when the retry is guaranteed to re-execute (model re-sent ->
+            # state gone, or the peer can't dedup).
+            if state is not None and not (hit and dedup):
                 self.runtime.restore(self.fp, state)
         except Exception:  # noqa: BLE001 — recovery is best-effort
             return False
@@ -619,7 +810,13 @@ class ClientSession(AvecSession):
             # (application error, one slow request) — re-raising beats
             # migrating state away from a healthy destination
             raise exc
-        self.client.registry.mark_unhealthy(self.destination)
+        # quarantine, not just mark_unhealthy: a heartbeat that flaps the
+        # node healthy inside the cool-down must not make it routable again
+        self.client.registry.quarantine(self.destination,
+                                        self.client.migration.quarantine_s)
+        dead_rt = self.runtime
+        if self._rehome_to_standby("failover"):
+            return              # warm promotion: standby already had state
         state = self._shadow.state if self._shadow is not None else None
         if state is None:
             state = {}          # nothing shadowed yet: restore empty state
@@ -631,6 +828,10 @@ class ClientSession(AvecSession):
                 self, self.workload, from_name=self.destination,
                 state=state, exclude=unservable)
         except NoDestinationError:
+            try:                # pool exhausted: still don't leak the dead
+                dead_rt.close() # runtime's channel/in-flight futures
+            except Exception:  # noqa: BLE001
+                pass
             raise exc           # nowhere to go: surface the original death
         self.destination = new
 

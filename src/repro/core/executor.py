@@ -134,12 +134,25 @@ class TenantThrottled(RemoteError):
         self.retry_after_s = retry_after_s
 
 
+class DestinationDraining(RemoteError):
+    """Typed zero-downtime-drain response: the destination is ALIVE (it
+    still serves in-flight work, snapshots, and pings) but admits no new
+    ``run`` ops.  Never retried locally and never treated as a death —
+    the session layer re-homes to its warm standby instead."""
+
+    def __init__(self, msg: str, destination: str = "?") -> None:
+        super().__init__(msg)
+        self.destination = destination
+
+
 def _remote_exception(rmeta: dict) -> RemoteError:
     """The typed host-side exception for a ``{"ok": False}`` response."""
     msg = rmeta.get("error", "unknown remote error")
     if rmeta.get("throttled"):
         return TenantThrottled(msg, rmeta.get("tenant", DEFAULT_TENANT),
                                float(rmeta.get("retry_after_s", 0.01)))
+    if rmeta.get("draining"):
+        return DestinationDraining(msg, rmeta.get("name", "?"))
     return RemoteError(msg)
 
 
@@ -474,16 +487,26 @@ class DestinationExecutor:
                  max_coalesce: int = 8,
                  tenant_weights: dict | None = None,
                  tenant_max_inflight: int = 0,
-                 tenant_max_bytes: float = 0.0) -> None:
+                 tenant_max_bytes: float = 0.0,
+                 replay_cache: int = 32) -> None:
         self.libraries = libraries
         self.cache = cache or ModelCache()
         self.name = name
         self.fail = False          # fault-injection switch (tests/migration)
+        self.draining = False      # zero-downtime drain: stop admitting runs
         self.tenant_max_inflight = int(tenant_max_inflight)
         self.tenant_max_bytes = float(tenant_max_bytes)
         self._adm_lock = threading.Lock()
         self._adm: dict[str, dict] = {}     # tenant -> admission counters
         self._tls = threading.local()       # per-connection-thread recv lease
+        # idempotent replay guard: per-session LRU of recently served
+        # call ids -> completed responses.  A failover retry of a call the
+        # destination DID finish (only the ack was lost) replays the cached
+        # result instead of executing twice.
+        self.replay_cache = int(replay_cache)
+        self._replay_lock = threading.Lock()
+        self._replay: dict[str, collections.OrderedDict] = {}
+        self.replay_hits = 0
         self._coalescer = (_Coalescer(self._run_batch, coalesce_window_s,
                                       max_coalesce, tenant_weights)
                            if coalesce else None)
@@ -514,6 +537,49 @@ class DestinationExecutor:
     def shutdown(self) -> None:
         if self._coalescer:
             self._coalescer.stop()
+
+    # -- zero-downtime drain -------------------------------------------
+    def pending_work(self) -> int:
+        """Admitted-but-unfinished ``run`` ops plus coalescer queue depth —
+        what a drain waits to bleed to zero."""
+        with self._adm_lock:
+            inflight = sum(st["inflight"] for st in self._adm.values())
+        queued = 0
+        if self._coalescer is not None:
+            with self._coalescer._cv:
+                queued = self._coalescer._q.pending
+        return inflight + queued
+
+    def drain(self, timeout_s: float = 30.0, poll_s: float = 0.005) -> dict:
+        """Zero-downtime drain: stop admitting new ``run`` ops (they get a
+        typed ``draining`` response so sessions re-home), keep serving
+        everything already admitted — the coalescer's QoS queues bleed
+        through their normal fair drain — and block until nothing is
+        pending (or ``timeout_s``).  Snapshot/restore/ping stay served
+        throughout, so standbys can warm up while the node bleeds."""
+        self.draining = True
+        deadline = time.monotonic() + timeout_s
+        while time.monotonic() < deadline and self.pending_work():
+            time.sleep(poll_s)
+        pending = self.pending_work()
+        return {"drained": pending == 0, "pending": pending}
+
+    # -- idempotent replay guard ---------------------------------------
+    def _replay_get(self, fp: str, call_id: str):
+        with self._replay_lock:
+            lru = self._replay.get(fp)
+            if lru is None or call_id not in lru:
+                return None
+            lru.move_to_end(call_id)
+            self.replay_hits += 1
+            return lru[call_id]
+
+    def _replay_put(self, fp: str, call_id: str, rmeta: dict, rtree) -> None:
+        with self._replay_lock:
+            lru = self._replay.setdefault(fp, collections.OrderedDict())
+            lru[call_id] = (dict(rmeta), rtree)
+            while len(lru) > self.replay_cache:
+                lru.popitem(last=False)
 
     # -- per-tenant admission control ----------------------------------
     def _adm_entry(self, tenant: str) -> dict:
@@ -621,7 +687,21 @@ class DestinationExecutor:
             "tenant_stats": self.tenant_stats,
             "tenant_limits": {"max_inflight": self.tenant_max_inflight,
                               "max_bytes": self.tenant_max_bytes},
+            # failure domain: a draining node advertises it so schedulers
+            # stop routing here; replay_dedup tells hosts a failover retry
+            # carrying the same call_id cannot double-execute
+            "draining": self.draining,
+            "replay_dedup": self.replay_cache > 0,
         }, None, "raw"
+
+    def _op_drain(self, meta, tree):
+        """Control op for zero-downtime drain.  ``{"op": "drain"}`` flips
+        the admission gate (non-blocking — the serve loop or a caller polls
+        ``pending`` until the node has bled); ``{"op": "drain", "enable":
+        False}`` re-opens admission (tests, canary un-drain)."""
+        self.draining = bool(meta.get("enable", True))
+        return {"ok": True, "draining": self.draining,
+                "pending": self.pending_work()}, None, "raw"
 
     def _op_has_model(self, meta, tree):
         return {"ok": True, "resident": self.cache.has(meta["fp"])}, None, "raw"
@@ -639,6 +719,20 @@ class DestinationExecutor:
     def _op_run(self, meta, tree):
         codec = meta.get("codec", "raw")
         tenant = meta.get("tenant") or DEFAULT_TENANT
+        call_id = meta.get("call_id")
+        if call_id is not None:
+            # replay guard FIRST: a retried call the node already finished
+            # must be answered from cache even while draining or throttled
+            # (the retry is not new work — its execution already happened)
+            hit = self._replay_get(meta["fp"], call_id)
+            if hit is not None:
+                rmeta, rtree = hit
+                return {**rmeta, "replayed": True}, rtree, codec
+        if self.draining:
+            return {"ok": False, "draining": True, "name": self.name,
+                    "error": f"destination {self.name} is draining: new "
+                             f"work is not admitted; re-home the session "
+                             f"to its standby"}, None, "raw"
         nbytes = tree_wire_bytes(tree) if tree is not None else 0
         admitted, retry_after = self._admit(tenant, nbytes)
         if not admitted:
@@ -658,12 +752,16 @@ class DestinationExecutor:
             else:
                 rmeta, out_np = self._run_one(meta, tree)
             done_ok = True
+            if call_id is not None:
+                self._replay_put(meta["fp"], call_id, rmeta, out_np)
             return rmeta, out_np, codec
         finally:
             self._release(tenant, nbytes, served=done_ok)
 
     def _op_drop_session(self, meta, tree):
         self.cache.drop(meta["fp"])
+        with self._replay_lock:
+            self._replay.pop(meta["fp"], None)
         return {"ok": True}, None, "raw"
 
     def _op_snapshot(self, meta, tree):
@@ -787,23 +885,29 @@ class HostRuntime:
         return meta["transfer_s"]
 
     def _run_meta(self, fp: str, fn: str, batchable: bool,
-                  tenant: str | None, qos: dict | None) -> dict:
+                  tenant: str | None, qos: dict | None,
+                  call_id: str | None = None) -> dict:
         meta = {"op": "run", "fp": fp, "fn": fn, "codec": self.codec,
                 "batchable": batchable}
         if tenant is not None:
             meta["tenant"] = tenant
         if qos:
             meta["qos"] = dict(qos)
+        if call_id is not None:
+            # client-generated logical id: a failover retry reuses it so the
+            # destination's replay LRU can dedup an already-executed call
+            meta["call_id"] = call_id
         return meta
 
     def run(self, fp: str, fn: str, args, batchable: bool = False, *,
-            tenant: str | None = None, qos: dict | None = None) -> Any:
+            tenant: str | None = None, qos: dict | None = None,
+            call_id: str | None = None) -> Any:
         """One execution cycle.  ``tenant``/``qos`` ride in the frame
         metadata (fair-share drain + admission at the destination); a
         :class:`TenantThrottled` response is retried with jittered backoff
         up to ``throttle_retries`` times before surfacing."""
         args_np = jax.tree_util.tree_map(np.asarray, args)
-        rmeta = self._run_meta(fp, fn, batchable, tenant, qos)
+        rmeta = self._run_meta(fp, fn, batchable, tenant, qos, call_id)
         attempt = 0
         while True:
             try:
@@ -816,6 +920,12 @@ class HostRuntime:
                 self.throttle_retried += 1
                 time.sleep(_throttle_backoff(attempt, e.retry_after_s))
                 attempt += 1
+
+    def drain(self, enable: bool = True) -> dict:
+        """Flip the destination's admission gate (zero-downtime drain
+        control op).  Returns the executor's ``{"draining", "pending"}``
+        status so callers can poll until the node has bled."""
+        return self._rpc({"op": "drain", "enable": enable})[0]
 
     def snapshot(self, fp: str) -> Any:
         return self._rpc({"op": "snapshot", "fp": fp})[1]
@@ -1236,7 +1346,8 @@ class PipelinedHostRuntime(HostRuntime):
         return self.wait(self.submit(meta, tree, codec=codec))
 
     def run_async(self, fp: str, fn: str, args, batchable: bool = False, *,
-                  tenant: str | None = None, qos: dict | None = None) -> Future:
+                  tenant: str | None = None, qos: dict | None = None,
+                  call_id: str | None = None) -> Future:
         """Async ``run``: a Future resolving to (rmeta, output tree).
         Resolve it with :meth:`wait` (or ``.result()`` after another call on
         this runtime has pumped the channel).  One wire attempt — a
@@ -1244,8 +1355,9 @@ class PipelinedHostRuntime(HostRuntime):
         synchronous :meth:`run` wrapper (and the serving frontends) own the
         jittered retry loop."""
         args_np = jax.tree_util.tree_map(np.asarray, args)
-        inner = self.submit(self._run_meta(fp, fn, batchable, tenant, qos),
-                            args_np, codec=self.codec)
+        inner = self.submit(
+            self._run_meta(fp, fn, batchable, tenant, qos, call_id),
+            args_np, codec=self.codec)
 
         def _record(f: Future) -> None:
             if f.exception() is None:
@@ -1254,13 +1366,14 @@ class PipelinedHostRuntime(HostRuntime):
         return inner
 
     def run(self, fp: str, fn: str, args, batchable: bool = False, *,
-            tenant: str | None = None, qos: dict | None = None) -> Any:
+            tenant: str | None = None, qos: dict | None = None,
+            call_id: str | None = None) -> Any:
         attempt = 0
         while True:
             try:
                 return self.wait(self.run_async(
                     fp, fn, args, batchable=batchable,
-                    tenant=tenant, qos=qos))[1]
+                    tenant=tenant, qos=qos, call_id=call_id))[1]
             except TenantThrottled as e:
                 if attempt >= self.throttle_retries:
                     raise

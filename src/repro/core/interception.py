@@ -172,14 +172,15 @@ class AvecSession:
         return False
 
     # ------------------------------------------------------------------
-    def call(self, fn: str, args: Any) -> Any:
+    def call(self, fn: str, args: Any, *, call_id: str | None = None) -> Any:
         if not self._ready:
             self.ensure_model()
         sent0 = self.runtime.bytes_sent
         recv0 = self.runtime.bytes_received
         t0 = time.perf_counter()
         out = self.runtime.run(self.fp, fn, args,
-                               tenant=self.tenant, qos=self.qos)
+                               tenant=self.tenant, qos=self.qos,
+                               call_id=call_id)
         wall = time.perf_counter() - t0
         compute = self.runtime.last_compute_s
         self.profiler.record_cycle(

@@ -23,27 +23,50 @@ from repro.core.virtualization import AcceleratorRegistry
 
 
 class HeartbeatMonitor:
+    """Liveness probe with K-consecutive-miss failure detection.
+
+    A single missed ping is noise (GC pause, a saturated link); only
+    ``misses`` consecutive misses declare the destination dead — registry
+    marked unhealthy, ``failed`` set, ``on_failure`` fired.  The loop keeps
+    monitoring after a failure: a destination that answers again is marked
+    healthy, ``failed`` clears, the flap is counted, and ``on_recovery``
+    fires (the scheduler's quarantine cool-down — not this monitor — decides
+    when a flapping node may take new work again).  Ping intervals are
+    jittered so a fleet of monitors started together does not synchronize
+    into probe bursts."""
+
     def __init__(self, runtime: HostRuntime, name: str,
                  registry: AcceleratorRegistry, *, interval_s: float = 0.05,
                  misses: int = 3, timeout_s: float = 0.5,
-                 on_failure: Optional[Callable[[str], None]] = None) -> None:
+                 jitter: float = 0.2, seed: int = 0,
+                 on_failure: Optional[Callable[[str], None]] = None,
+                 on_recovery: Optional[Callable[[str], None]] = None) -> None:
+        import random
         self.runtime = runtime
         self.name = name
         self.registry = registry
         self.interval_s = interval_s
         self.misses = misses
         self.timeout_s = timeout_s
+        self.jitter = max(0.0, min(float(jitter), 0.95))
         self.on_failure = on_failure
+        self.on_recovery = on_recovery
+        self._rng = random.Random(seed if seed else hash(name) & 0xFFFF)
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self.failed = threading.Event()
+        self._lock = threading.Lock()
+        self._pings = 0             # successful pings
+        self._missed = 0            # total missed pings (lifetime)
+        self._consecutive = 0       # current miss streak
+        self._failures = 0          # times declared dead
+        self._flaps = 0             # dead -> alive recoveries
 
     def start(self) -> "HeartbeatMonitor":
         self._thread.start()
         return self
 
     def _loop(self) -> None:
-        consecutive = 0
         while not self._stop.is_set():
             try:
                 old_timeout = self.runtime.timeout
@@ -52,16 +75,37 @@ class HeartbeatMonitor:
                     self.runtime.ping()
                 finally:
                     self.runtime.timeout = old_timeout
-                consecutive = 0
+                with self._lock:
+                    self._pings += 1
+                    self._consecutive = 0
+                if self.failed.is_set():
+                    # the destination answered after being declared dead
+                    with self._lock:
+                        self._flaps += 1
+                    self.registry.mark_healthy(self.name)
+                    self.failed.clear()
+                    if self.on_recovery:
+                        self.on_recovery(self.name)
             except Exception:  # noqa: BLE001 — any ping failure counts
-                consecutive += 1
-                if consecutive >= self.misses:
+                with self._lock:
+                    self._missed += 1
+                    self._consecutive += 1
+                    streak = self._consecutive
+                if streak >= self.misses and not self.failed.is_set():
+                    with self._lock:
+                        self._failures += 1
                     self.registry.mark_unhealthy(self.name)
                     self.failed.set()
                     if self.on_failure:
                         self.on_failure(self.name)
-                    return
-            self._stop.wait(self.interval_s)
+            self._stop.wait(self.interval_s * self._rng.uniform(
+                1.0 - self.jitter, 1.0 + self.jitter))
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"pings": self._pings, "missed": self._missed,
+                    "consecutive_misses": self._consecutive,
+                    "failures": self._failures, "flaps": self._flaps}
 
     def stop(self) -> None:
         self._stop.set()
@@ -92,12 +136,17 @@ class SessionShadow:
 class MigrationManager:
     def __init__(self, registry: AcceleratorRegistry,
                  scheduler: DeviceAwareScheduler,
-                 runtime_factory: Callable[[str], HostRuntime]) -> None:
+                 runtime_factory: Callable[[str], HostRuntime],
+                 quarantine_s: float = 5.0) -> None:
         """``runtime_factory(name)`` builds a HostRuntime connected to the
-        named pool member (e.g. dials its TCP endpoint)."""
+        named pool member (e.g. dials its TCP endpoint).  ``quarantine_s``
+        is the routing cool-down imposed on a destination that just failed
+        over — a lucky heartbeat recovery inside the window does not make
+        it routable again."""
         self.registry = registry
         self.scheduler = scheduler
         self.runtime_factory = runtime_factory
+        self.quarantine_s = quarantine_s
         self.migrations: list[dict] = []
 
     # ------------------------------------------------------------------
@@ -133,7 +182,35 @@ class MigrationManager:
 
     def failover(self, session: AvecSession, workload, *, failed_name: str,
                  shadow: SessionShadow) -> str:
-        """Failover after destination death: restore from the host shadow."""
-        self.registry.mark_unhealthy(failed_name)
-        return self.migrate(session, workload, from_name=failed_name,
-                            state=shadow.state)
+        """Failover after destination death: restore from the host shadow.
+
+        The failed destination is quarantined for ``quarantine_s`` so the
+        scheduler cannot route new work back the moment a heartbeat flaps
+        it healthy.  If re-routing itself fails (``NoDestinationError`` —
+        pool exhausted), the dead runtime is still closed so its channel
+        and any pipelined in-flight futures do not leak; the session is
+        left runtime-less rather than holding a stub to a dead node."""
+        self.registry.quarantine(failed_name, self.quarantine_s)
+        # an empty-dict state still restores (idempotent) — shadow.state can
+        # legitimately be None when failure hit before the first snapshot,
+        # and migrate(state=None) would try to live-snapshot the dead node
+        state = shadow.state if shadow.state is not None else {}
+        try:
+            return self.migrate(session, workload, from_name=failed_name,
+                                state=state)
+        except BaseException:
+            try:
+                session.runtime.close()
+            except Exception:  # noqa: BLE001 — already dead; close is best-effort
+                pass
+            raise
+
+    def record_rehome(self, from_name: str, to_name: str, *, warm: bool,
+                      cached: bool, seconds: float, reason: str) -> dict:
+        """Ledger entry for a replica-group re-home (warm standby promotion)
+        — same ``migrations`` list as :meth:`migrate` so operators and tests
+        see one ordered history of every time a session changed homes."""
+        entry = {"from": from_name, "to": to_name, "cached": cached,
+                 "seconds": seconds, "warm": warm, "reason": reason}
+        self.migrations.append(entry)
+        return entry

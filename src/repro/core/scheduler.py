@@ -208,7 +208,11 @@ class DeviceAwareScheduler:
 
     def candidates(self, w: Workload, exclude: tuple[str, ...] = (),
                    tenant: str | None = None) -> list[VirtualAccelerator]:
-        pool = [va for va in self.registry.healthy()
+        # routable, not merely healthy: a destination that advertised
+        # ``draining`` in its handshake (or sits in a post-failover
+        # quarantine cool-down) must stop receiving NEW placements while
+        # its in-flight work bleeds and sessions re-home
+        pool = [va for va in self.registry.routable()
                 if va.name not in exclude
                 and va.spec.mem_bytes >= w.model_bytes]
         return sorted(pool, key=lambda va: self.score(w, va, tenant))
@@ -218,7 +222,7 @@ class DeviceAwareScheduler:
         cands = self.candidates(w, exclude, tenant)
         if not cands:
             raise NoDestinationError(
-                f"no healthy accelerator can host {w.name} "
+                f"no routable accelerator can host {w.name} "
                 f"({w.model_bytes/1e9:.1f} GB model)")
         return cands[0]
 

@@ -616,6 +616,12 @@ class TCPServer:
             with self._lock:
                 if conn in self._conns:
                     self._conns.remove(conn)
+                # self-reap: a finished connection leaves _threads on its own
+                # instead of lingering (stopped but listed) until the accept
+                # loop's next 0.2s sweep
+                me = threading.current_thread()
+                self._threads = [t for t in self._threads
+                                 if t is not me and t.is_alive()]
             conn.close()
             if pool is not None:
                 pool.retired = True
@@ -701,6 +707,163 @@ class SimulatedChannel(Channel):
         data = self._inner.recv(timeout)
         self._charge(len(data), "recv")
         return data
+
+    def close(self) -> None:
+        self._inner.close()
+
+
+# ---------------------------------------------------------------------------
+# Deterministic fault injection (chaos harness)
+# ---------------------------------------------------------------------------
+
+class FaultyChannel(Channel):
+    """Deterministic fault injection over any channel — the chaos harness
+    the failure-domain tests drive.
+
+    Wraps an inner channel (TCP, Loopback, Simulated — they compose) and
+    applies a seeded schedule of faults to the frames crossing it.  All
+    faults default off; explicit schedules are 1-based frame indices
+    counted per direction, probabilistic schedules draw from one seeded RNG
+    so a given ``seed`` replays the exact same fault sequence.
+
+    Fault vocabulary:
+
+    * **drop**       — the frame is swallowed silently (``drop_sends`` /
+                       ``drop_recvs`` indices, or ``drop_send_p``).  A
+                       dropped response's lease is released, never leaked.
+    * **delay**      — ``delay_s`` of sleep before the frame is forwarded
+                       (``delay_sends`` / ``delay_recvs`` / ``delay_send_p``)
+                       — the delayed-ack schedule.
+    * **duplicate**  — the frame is delivered twice (``dup_sends`` /
+                       ``dup_send_p``): duplicated request delivery at the
+                       destination (replay-dedup territory) or a duplicated
+                       response a pipelined host must ignore by rid.
+    * **partial**    — ``partial_send_at``: the Nth outbound frame dies
+                       mid-write.  Nothing framable reaches the peer and the
+                       channel latches broken both ways (the kernel buffer
+                       holds half a frame nobody can complete) — the
+                       mid-frame-kill schedule.
+    * **blackhole**  — from send #``blackhole_after`` on, every frame in
+                       both directions is swallowed silently; ``recv`` burns
+                       its timeout.  The node that is "up" but answers
+                       nothing.
+
+    ``faults`` counts every injection by kind; :meth:`stats` snapshots it.
+    The wrapper intentionally does NOT expose the resumable-send API — a
+    pipelined runtime over a faulty link uses the plain blocking send path,
+    keeping the fault schedule frame-aligned and deterministic."""
+
+    def __init__(self, inner: Channel, *, seed: int = 0,
+                 drop_sends: tuple = (), drop_recvs: tuple = (),
+                 dup_sends: tuple = (),
+                 delay_sends: tuple = (), delay_recvs: tuple = (),
+                 delay_s: float = 0.01,
+                 drop_send_p: float = 0.0, dup_send_p: float = 0.0,
+                 delay_send_p: float = 0.0,
+                 partial_send_at: Optional[int] = None,
+                 blackhole_after: Optional[int] = None) -> None:
+        import random as _random
+        self._inner = inner
+        self._rng = _random.Random(seed)
+        self.drop_sends = set(drop_sends)
+        self.drop_recvs = set(drop_recvs)
+        self.dup_sends = set(dup_sends)
+        self.delay_sends = set(delay_sends)
+        self.delay_recvs = set(delay_recvs)
+        self.delay_s = delay_s
+        self.drop_send_p = drop_send_p
+        self.dup_send_p = dup_send_p
+        self.delay_send_p = delay_send_p
+        self.partial_send_at = partial_send_at
+        self.blackhole_after = blackhole_after
+        self._sends = 0
+        self._recvs = 0
+        self._blackholed = False
+        self._forced_broken = False
+        self._lock = threading.Lock()
+        self.faults = {"dropped": 0, "duplicated": 0, "delayed": 0,
+                       "partial": 0, "blackholed": 0}
+
+    @property
+    def broken(self) -> bool:
+        return self._forced_broken or getattr(self._inner, "broken", False)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"sends": self._sends, "recvs": self._recvs,
+                    **self.faults}
+
+    # ------------------------------------------------------------------
+    def send(self, data) -> None:
+        with self._lock:
+            if self._forced_broken:
+                raise ChannelClosed("faulty channel: broken by injected "
+                                    "mid-frame kill")
+            self._sends += 1
+            i = self._sends
+            if (self.blackhole_after is not None
+                    and i >= self.blackhole_after):
+                self._blackholed = True
+            if self._blackholed:
+                self.faults["blackholed"] += 1
+                return
+            if i == self.partial_send_at:
+                # a frame cut mid-write is unframeable at the peer: nothing
+                # is delivered, and the stream is dead in both directions
+                self.faults["partial"] += 1
+                self._forced_broken = True
+                raise ChannelClosed(
+                    f"faulty channel: injected mid-frame kill on send #{i}")
+            drop = i in self.drop_sends or (
+                self.drop_send_p and self._rng.random() < self.drop_send_p)
+            dup = i in self.dup_sends or (
+                self.dup_send_p and self._rng.random() < self.dup_send_p)
+            delay = i in self.delay_sends or (
+                self.delay_send_p and self._rng.random() < self.delay_send_p)
+        if drop:
+            with self._lock:
+                self.faults["dropped"] += 1
+            return
+        if delay:
+            with self._lock:
+                self.faults["delayed"] += 1
+            time.sleep(self.delay_s)
+        self._inner.send(data)
+        if dup:
+            with self._lock:
+                self.faults["duplicated"] += 1
+            self._inner.send(data)
+
+    def recv(self, timeout: Optional[float] = None):
+        while True:
+            with self._lock:
+                if self._forced_broken:
+                    raise ChannelClosed("faulty channel: broken by injected "
+                                        "mid-frame kill")
+                if self._blackholed:
+                    self.faults["blackholed"] += 1
+                    hole = True
+                else:
+                    hole = False
+            if hole:
+                time.sleep(timeout if timeout else 0.05)
+                raise TimeoutError("faulty channel: recv blackholed")
+            data = self._inner.recv(timeout)
+            with self._lock:
+                self._recvs += 1
+                i = self._recvs
+                drop = i in self.drop_recvs
+                delay = i in self.delay_recvs
+                if drop:
+                    self.faults["dropped"] += 1
+                elif delay:
+                    self.faults["delayed"] += 1
+            if drop:
+                release_buffer(data)    # a swallowed frame's lease must not leak
+                continue
+            if delay:
+                time.sleep(self.delay_s)
+            return data
 
     def close(self) -> None:
         self._inner.close()

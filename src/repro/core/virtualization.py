@@ -13,6 +13,7 @@ drives
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass, field, replace
 from typing import Optional
 
@@ -86,10 +87,22 @@ class VirtualAccelerator:
     healthy: bool = True
     total_requests: int = 0
     capabilities: dict = field(default_factory=dict)
+    #: the endpoint advertised (or a client observed) a zero-downtime drain:
+    #: alive — it still answers snapshot/restore/ping — but not admitting
+    #: new work, so routing must skip it while sessions re-home
+    draining: bool = False
+    #: monotonic deadline of a post-failover cool-down: even if something
+    #: flips ``healthy`` back (a heartbeat recovery, a successful re-dial),
+    #: the scheduler must not route here until the window passes
+    quarantined_until: float = 0.0
 
     @property
     def name(self) -> str:
         return self.spec.name
+
+    @property
+    def quarantined(self) -> bool:
+        return time.monotonic() < self.quarantined_until
 
 
 class AcceleratorRegistry:
@@ -141,9 +154,42 @@ class AcceleratorRegistry:
             if name in self._pool:
                 self._pool[name].healthy = True
 
+    def mark_draining(self, name: str, draining: bool = True) -> None:
+        """Flag an endpoint as draining (alive, not admitting new work).
+        Routing — :meth:`routable` — skips it; health is untouched."""
+        with self._lock:
+            if name in self._pool:
+                self._pool[name].draining = bool(draining)
+
+    def quarantine(self, name: str, cooldown_s: float) -> None:
+        """Mark ``name`` unhealthy AND hold it out of :meth:`routable` for
+        ``cooldown_s`` even if its health flag flips back earlier — a node
+        that just killed a session must re-earn routing, not rejoin on the
+        first lucky ping."""
+        with self._lock:
+            va = self._pool.get(name)
+            if va is not None:
+                va.healthy = False
+                va.quarantined_until = max(va.quarantined_until,
+                                           time.monotonic() + cooldown_s)
+
+    def clear_quarantine(self, name: str) -> None:
+        with self._lock:
+            if name in self._pool:
+                self._pool[name].quarantined_until = 0.0
+
     def healthy(self) -> list[VirtualAccelerator]:
         with self._lock:
             return [v for v in self._pool.values() if v.healthy]
+
+    def routable(self) -> list[VirtualAccelerator]:
+        """The members a scheduler may route NEW work onto: healthy, not
+        draining, and past any failover quarantine cool-down.  (``healthy``
+        keeps its broader meaning — a draining node is healthy but not
+        routable.)"""
+        with self._lock:
+            return [v for v in self._pool.values()
+                    if v.healthy and not v.draining and not v.quarantined]
 
     def all(self) -> list[VirtualAccelerator]:
         with self._lock:

@@ -66,6 +66,14 @@ def main() -> None:
     ap.add_argument("--qos-priority", type=int, default=0,
                     help="host role: declared priority class (higher "
                          "drains first)")
+    ap.add_argument("--drain", action="store_true",
+                    help="destination role: exit via zero-downtime drain — "
+                         "on ctrl-c stop admitting (DestinationDraining "
+                         "bounces tell clients to re-home to their warm "
+                         "standbys), bleed the QoS queues, then stop")
+    ap.add_argument("--drain-timeout", type=float, default=30.0,
+                    help="destination role: max seconds to wait for "
+                         "in-flight work to bleed during --drain")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--max-in-flight", type=int, default=8,
@@ -98,6 +106,19 @@ def main() -> None:
             while True:
                 time.sleep(1)
         except KeyboardInterrupt:
+            if args.drain:
+                # zero-downtime exit: stop admitting (clients re-home on the
+                # DestinationDraining bounce; ping keeps advertising
+                # "draining" so schedulers stop routing here), bleed every
+                # QoS queue, THEN tear the server down — in-flight requests
+                # finish and their responses go out before the socket dies
+                print(f"draining {ex.name}: admission closed, "
+                      f"bleeding {ex.pending_work()} in-flight "
+                      f"request(s)...")
+                res = ex.drain(timeout_s=args.drain_timeout)
+                print(f"drain {'complete' if res['drained'] else 'TIMED OUT'}"
+                      f" (pending={res['pending']}, "
+                      f"replay hits served={ex.replay_hits})")
             server.stop()
             ex.shutdown()
         return

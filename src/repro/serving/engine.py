@@ -31,7 +31,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.executor import TenantThrottled, _throttle_backoff
+from repro.core.executor import (DestinationDraining, TenantThrottled,
+                                 _throttle_backoff)
 from repro.core.memory import detach_tree
 from repro.models import model as M
 
@@ -291,7 +292,13 @@ class ShardedOffloadFrontend:
     The shard router needs no new wire format — vectored frames are already
     per-request, so sharding is purely a host-side assignment problem.
     Results gather back under their request ids regardless of which shard
-    (or in what order) served them."""
+    (or in what order) served them.
+
+    Drain-aware: a shard that bounces a request with
+    :class:`~repro.core.executor.DestinationDraining` (zero-downtime exit)
+    is retired from the rotation and the bounced request re-routes to a
+    remaining shard — the fan-out completes with zero dropped requests as
+    long as one shard stays admitting."""
 
     def __init__(self, frontends: list, names: Optional[list] = None) -> None:
         if not frontends:
@@ -300,32 +307,63 @@ class ShardedOffloadFrontend:
         self.names = list(names) if names is not None else [
             f"shard{i}" for i in range(len(frontends))]
         self.assigned = [0] * len(self.frontends)
+        self.drained: set = set()       # shard indices retired by a drain
+        self.rerouted = 0               # requests moved off a draining shard
+
+    def _active(self) -> list:
+        return [i for i in range(len(self.frontends))
+                if i not in self.drained]
 
     def submit(self, args: Any) -> Future:
-        """Route one request to the least-loaded shard (by assignment)."""
-        i = min(range(len(self.frontends)), key=lambda j: self.assigned[j])
+        """Route one request to the least-loaded admitting shard."""
+        active = self._active()
+        if not active:
+            raise DestinationDraining(
+                "all shards are draining", destination="*")
+        i = min(active, key=lambda j: self.assigned[j])
         self.assigned[i] += 1
         return self.frontends[i].submit(args)
+
+    def _gather_one(self, i: int, fut: Future, args: Any):
+        """Resolve one shard future; a draining bounce retires the shard
+        and re-submits on the least-loaded remaining one."""
+        while True:
+            try:
+                if hasattr(self.frontends[i], "gather"):
+                    return self.frontends[i].gather(fut, args)
+                return fut.result()
+            except DestinationDraining:
+                self.drained.add(i)
+                active = self._active()
+                if not active:
+                    raise           # nowhere left to re-route
+                self.rerouted += 1
+                i = min(active, key=lambda j: self.assigned[j])
+                self.assigned[i] += 1
+                fut = self.frontends[i].submit(args)
 
     def map(self, requests: dict) -> dict:
         """Round-robin ``{rid: args}`` over the shards, gather all results.
         Submission interleaves shards so every destination's pipeline fills
         before any result is awaited.  TenantThrottled bounces retry on the
-        shard that served them (each frontend's own jittered gather)."""
+        shard that served them (each frontend's own jittered gather);
+        DestinationDraining bounces re-route to a remaining shard."""
         rr = itertools.cycle(range(len(self.frontends)))
         futs = {}
         for rid, args in requests.items():
             i = next(rr)
+            while i in self.drained and len(self.drained) < len(self.frontends):
+                i = next(rr)    # skip shards already known to be draining
             self.assigned[i] += 1
             futs[rid] = (i, self.frontends[i].submit(args))
-        return {rid: (self.frontends[i].gather(fut, requests[rid])
-                      if hasattr(self.frontends[i], "gather")
-                      else fut.result())
+        return {rid: self._gather_one(i, fut, requests[rid])
                 for rid, (i, fut) in futs.items()}
 
     def stats(self) -> dict:
         """Per-shard frontend/data-plane counters keyed by shard name."""
         return {"assigned": dict(zip(self.names, self.assigned)),
+                "drained": sorted(self.names[i] for i in self.drained),
+                "rerouted": self.rerouted,
                 "shards": {n: fe.stats()
                            for n, fe in zip(self.names, self.frontends)}}
 

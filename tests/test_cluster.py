@@ -1,0 +1,736 @@
+"""Proactive failure domain: consistent-hash placement, warm shadow replica
+groups, zero-downtime drain, and the deterministic fault-injection harness.
+
+The chaos tests here drive FaultyChannel schedules (mid-frame kill, dropped/
+delayed ack, duplicated delivery, blackhole, drain-during-burst) across the
+sync, pipelined, and coalesced paths and assert the two acceptance
+properties: an acked result is never lost (byte-identical streams through a
+failover), and at most the in-flight window is re-executed (replay dedup
+absorbs retries of calls the destination already finished).
+
+Seeded via AVEC_CHAOS_SEED so CI can sweep schedules deterministically.
+"""
+import dataclasses
+import os
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro import avec
+from repro.configs import get_arch, reduced
+from repro.core import (AcceleratorRegistry, DestinationExecutor,
+                        DeviceAwareScheduler, HostRuntime, Workload)
+from repro.core.cache import model_fingerprint
+from repro.core.cluster import (ClusterMembership, ConsistentHashRing,
+                                ReplicaGroup)
+from repro.core.executor import DestinationDraining
+from repro.core.interception import AvecSession
+from repro.core.library import make_model_library
+from repro.core.migration import (HeartbeatMonitor, MigrationManager,
+                                  SessionShadow)
+from repro.core.scheduler import NoDestinationError
+from repro.core.serialization import unpack_message
+from repro.core.transport import (ChannelClosed, DirectChannel, FaultyChannel,
+                                  LoopbackChannel, SimulatedChannel,
+                                  TCPChannel, TCPServer, VirtualClock)
+from repro.core.virtualization import JETSON_TX2
+from repro.models import model as M
+from repro.serving.engine import generate_sequential
+
+CHAOS_SEED = int(os.environ.get("AVEC_CHAOS_SEED", "0"))
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = reduced(get_arch("granite-3-2b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    lib = make_model_library(cfg, max_cache_len=32)
+    # warm the jit caches for every shape the chaos tests use, so injected
+    # faults race against millisecond calls rather than first-compile time
+    ex = DestinationExecutor({"lm": lib}, name="warmup")
+    rt = HostRuntime(DirectChannel(ex))
+    s = AvecSession(cfg, params, rt, "lm")
+    s.ensure_model()
+    s.call("prefill", {"tokens": np.zeros((1, 6), np.int32)})
+    s.call("decode", {"tokens": np.zeros((1, 1), np.int32)})
+    s.call("score", {"tokens": np.zeros((1, 8), np.int32),
+                     "targets": np.zeros((1, 8), np.int32)})
+    return cfg, params, lib
+
+
+def _counting_lib(lib, hits):
+    out = {}
+    for name, fn in lib.items():
+        def wrap(fn=fn, name=name):
+            def g(p, s, a):
+                hits[name] = hits.get(name, 0) + 1
+                return fn(p, s, a)
+            return g
+        out[name] = wrap()
+    return out
+
+
+def _wait_for(pred, timeout=3.0, poll=0.005):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(poll)
+    return pred()
+
+
+# ---------------------------------------------------------------------------
+# consistent-hash ring + membership
+# ---------------------------------------------------------------------------
+
+def test_hash_ring_membership_change_moves_only_affected_arc():
+    ring = ConsistentHashRing(["a", "b", "c"], vnodes=64)
+    keys = [f"tenant{i}:model{i % 7}" for i in range(200)]
+    before = {k: ring.primary(k) for k in keys}
+    ring.remove("c")
+    after = {k: ring.primary(k) for k in keys}
+    moved = [k for k in keys if before[k] != after[k]]
+    assert moved, "removing a member must move its arc"
+    assert all(before[k] == "c" for k in moved)       # ONLY c's keys moved
+    assert all(after[k] in ("a", "b") for k in moved)
+    ring.add("d")
+    after2 = {k: ring.primary(k) for k in keys}
+    moved2 = [k for k in keys if after[k] != after2[k]]
+    assert moved2 and all(after2[k] == "d" for k in moved2)
+    # every member owns a share of a 200-key space at 64 vnodes
+    assert {after2[k] for k in keys} == {"a", "b", "d"}
+
+
+def test_hash_ring_preference_is_distinct_and_respects_exclude():
+    ring = ConsistentHashRing(["a", "b", "c"], vnodes=32)
+    pref = ring.preference("k1")
+    assert sorted(pref) == ["a", "b", "c"]
+    assert pref[0] == ring.primary("k1")
+    assert pref[0] not in ring.preference("k1", exclude=(pref[0],))
+    assert ring.preference("k1", n=2) == pref[:2]
+    assert ConsistentHashRing([]).primary("x") is None
+    assert ConsistentHashRing([]).preference("x") == []
+
+
+def test_cluster_membership_sync_tracks_moved_placements():
+    reg = AcceleratorRegistry()
+    for n in ("a", "b", "c"):
+        reg.register(dataclasses.replace(JETSON_TX2, name=n))
+    cm = ClusterMembership(reg)
+    keys = [f"t{i}" for i in range(100)]
+    homes = {k: cm.place(k) for k in keys}
+    assert set(cm.stats()["members"]) == {"a", "b", "c"}
+    reg.mark_draining("b")                  # draining leaves the ring
+    delta = cm.sync()
+    assert delta["removed"] == ["b"] and not delta["added"]
+    assert delta["moved"]
+    assert all(old == "b" for old, new in delta["moved"].values())
+    for k in keys:                          # untouched arcs stay put
+        if homes[k] != "b":
+            assert cm.placement(k) == homes[k]
+    reg.mark_draining("b", False)           # rejoin: only b's arc moves back
+    delta2 = cm.sync()
+    assert delta2["added"] == ["b"]
+    assert all(new == "b" for old, new in delta2["moved"].values())
+    assert cm.stats()["moves"] == len(delta["moved"]) + len(delta2["moved"])
+
+
+def test_facade_hash_placement_is_sticky_and_arc_bounded(lm):
+    cfg, params, lib = lm
+    executors = [DestinationExecutor({"lm": lib}, name=n)
+                 for n in ("ha", "hb", "hc")]
+    with avec.connect(executors, placement="hash", shadow_every=0) as client:
+        s1 = client.session(cfg, params, "lm", tenant="acme")
+        key = f"acme:{model_fingerprint(cfg, params)}"
+        assert s1.destination == client.cluster.placement(key)
+        assert client.session(cfg, params, "lm",
+                              tenant="acme").destination == s1.destination
+        dests = {t: client.session(cfg, params, "lm", tenant=t).destination
+                 for t in (f"t{i}" for i in range(20))}
+        other = next(t for t, d in dests.items() if d != s1.destination)
+        # membership change: acme's home leaves; acme moves, other stays
+        client.registry.mark_draining(s1.destination)
+        assert client.session(cfg, params, "lm",
+                              tenant="acme").destination != s1.destination
+        assert client.session(cfg, params, "lm",
+                              tenant=other).destination == dests[other]
+        assert client.cluster.stats()["moves"] >= 1
+
+
+def test_replica_group_replicates_promotes_and_degrades():
+    class _RT:
+        def __init__(self):
+            self.fail = False
+            self.restored = []
+
+        def restore(self, fp, state):
+            if self.fail:
+                raise ChannelClosed("standby died")
+            self.restored.append((fp, state))
+
+    rt = _RT()
+    picks = iter(["b", None])
+    g = ReplicaGroup("k", "a", pick_standby=lambda p: next(picks),
+                     runtime_for=lambda n: rt, prepare=lambda n: None)
+    assert g.replicate("fp", {"s": 1}, 3)
+    assert g.standby == "b" and g.standby_step == 3 and g.replicated == 1
+    rt.fail = True                      # standby stops answering: dropped
+    assert not g.replicate("fp", {"s": 2}, 4)
+    assert g.standby is None and g.replication_failures == 1
+    assert not g.replicate("fp", {"s": 3}, 5)   # pool exhausted on re-pick
+    assert g.promote() is None                  # nothing warm to promote
+    rt2 = _RT()
+    g2 = ReplicaGroup("k", "a", pick_standby=lambda p: "c",
+                      runtime_for=lambda n: rt2)
+    assert g2.replicate("fp", {"s": 9}, 7)
+    assert g2.promote() == ("c", 7)
+    assert g2.primary == "c" and g2.standby is None and g2.promotions == 1
+
+
+# ---------------------------------------------------------------------------
+# heartbeat + failover hygiene
+# ---------------------------------------------------------------------------
+
+class _FlakyRuntime:
+    def __init__(self):
+        self.timeout = 0.5
+        self.fail = False
+        self.fails_left = 0
+        self.pings = 0
+
+    def ping(self, *a, **kw):
+        self.pings += 1
+        if self.fails_left > 0:
+            self.fails_left -= 1
+            raise ChannelClosed("injected miss")
+        if self.fail:
+            raise ChannelClosed("down")
+        return {"ok": True}
+
+
+def test_heartbeat_k_consecutive_misses_then_flap_recovery():
+    reg = AcceleratorRegistry()
+    reg.register(dataclasses.replace(JETSON_TX2, name="hb"))
+    rt = _FlakyRuntime()
+    mon = HeartbeatMonitor(rt, "hb", reg, interval_s=0.01, misses=3,
+                           timeout_s=0.2, seed=CHAOS_SEED or 1).start()
+    try:
+        assert _wait_for(lambda: rt.pings >= 2)
+        # a sub-threshold miss streak is noise, not a failure
+        rt.fails_left = 2
+        assert _wait_for(lambda: rt.fails_left == 0
+                         and mon.stats()["consecutive_misses"] == 0)
+        st = mon.stats()
+        assert st["failures"] == 0 and st["missed"] == 2
+        assert not mon.failed.is_set() and reg.get("hb").healthy
+        # a sustained outage is declared on the Kth consecutive miss
+        rt.fail = True
+        assert mon.failed.wait(3.0)
+        assert not reg.get("hb").healthy
+        st = mon.stats()
+        assert st["failures"] == 1 and st["consecutive_misses"] >= 3
+        # recovery: health restored, the flap is counted, monitoring goes on
+        rt.fail = False
+        assert _wait_for(lambda: not mon.failed.is_set())
+        assert reg.get("hb").healthy
+        assert mon.stats()["flaps"] == 1
+    finally:
+        mon.stop()
+
+
+def test_failover_pool_exhaustion_closes_runtime_and_quarantines(lm):
+    cfg, params, lib = lm
+    reg = AcceleratorRegistry()
+    reg.register(dataclasses.replace(JETSON_TX2, name="lone"))
+    sched = DeviceAwareScheduler(reg)
+    mgr = MigrationManager(reg, sched, runtime_factory=lambda n: None,
+                           quarantine_s=0.2)
+    rt = HostRuntime(DirectChannel(DestinationExecutor({"lm": lib},
+                                                       name="lone")))
+    sess = AvecSession(cfg, params, rt, "lm")
+    w = Workload("lm", flops=1e6, bytes_out=1e3, bytes_back=1e3,
+                 model_bytes=1e6)
+    with pytest.raises(NoDestinationError):
+        mgr.failover(sess, w, failed_name="lone", shadow=SessionShadow())
+    # the dead runtime must not leak even though re-routing itself failed
+    assert rt._closed is True
+    va = reg.get("lone")
+    assert not va.healthy and va.quarantined
+    # a heartbeat flapping it healthy inside the cool-down changes nothing
+    reg.mark_healthy("lone")
+    assert reg.routable() == []
+    time.sleep(0.25)
+    assert [v.name for v in reg.routable()] == ["lone"]
+
+
+# ---------------------------------------------------------------------------
+# fault-injection harness unit schedules
+# ---------------------------------------------------------------------------
+
+def test_faulty_channel_drop_dup_delay_schedules():
+    a, b = LoopbackChannel.pair()
+    ch = FaultyChannel(a, seed=CHAOS_SEED, drop_sends=(1,), dup_sends=(2,),
+                       delay_sends=(3,), delay_s=0.05)
+    ch.send(b"one")                     # swallowed
+    ch.send(b"two")                     # delivered twice
+    t0 = time.perf_counter()
+    ch.send(b"three")                   # delivered late
+    assert time.perf_counter() - t0 >= 0.05
+    assert b.recv(timeout=1.0) == b"two"
+    assert b.recv(timeout=1.0) == b"two"
+    assert b.recv(timeout=1.0) == b"three"
+    with pytest.raises(TimeoutError):
+        b.recv(timeout=0.02)            # the dropped frame never arrives
+    st = ch.stats()
+    assert st["sends"] == 3 and st["dropped"] == 1
+    assert st["duplicated"] == 1 and st["delayed"] == 1
+    # recv-side: a dropped ack is swallowed and the read keeps going
+    a2, b2 = LoopbackChannel.pair()
+    chr_ = FaultyChannel(a2, drop_recvs=(1,), delay_recvs=(2,), delay_s=0.05)
+    b2.send(b"lost-ack")
+    b2.send(b"late-ack")
+    t0 = time.perf_counter()
+    assert chr_.recv(timeout=1.0) == b"late-ack"
+    assert time.perf_counter() - t0 >= 0.05
+    assert chr_.stats()["dropped"] == 1 and chr_.stats()["delayed"] == 1
+
+
+def test_faulty_channel_mid_frame_kill_latches_broken_both_ways():
+    a, b = LoopbackChannel.pair()
+    ch = FaultyChannel(a, partial_send_at=2)
+    ch.send(b"ok")
+    assert b.recv(timeout=1.0) == b"ok"
+    with pytest.raises(ChannelClosed):
+        ch.send(b"dies mid-write")
+    assert ch.broken
+    with pytest.raises(TimeoutError):
+        b.recv(timeout=0.02)            # nothing framable reached the peer
+    with pytest.raises(ChannelClosed):
+        ch.send(b"after the kill")
+    with pytest.raises(ChannelClosed):
+        ch.recv(timeout=0.1)
+    assert ch.stats()["partial"] == 1
+
+
+def test_faulty_channel_blackhole_swallows_both_directions():
+    a, b = LoopbackChannel.pair()
+    ch = FaultyChannel(a, blackhole_after=2)
+    ch.send(b"ok")
+    assert b.recv(timeout=1.0) == b"ok"
+    ch.send(b"into the void")
+    with pytest.raises(TimeoutError):
+        b.recv(timeout=0.02)
+    b.send(b"reply nobody hears")
+    with pytest.raises(TimeoutError):
+        ch.recv(timeout=0.05)
+    assert not ch.broken                # up, answering nothing
+    assert ch.stats()["blackholed"] >= 2
+
+
+def test_faulty_channel_composes_over_simulated_link():
+    a, b = LoopbackChannel.pair()
+    clock = VirtualClock()
+    sim = SimulatedChannel(a, clock, bandwidth=1e6, latency=0.01,
+                           serialize_rate=2e6, name="edge")
+    ch = FaultyChannel(sim, drop_sends=(1,))
+    payload = b"x" * 100_000
+    ch.send(payload)                    # dropped BEFORE the simulated link
+    assert sum(clock.elapsed.values()) == 0.0
+    ch.send(payload)
+    assert b.recv(timeout=1.0) == payload
+    assert sum(clock.elapsed.values()) > 0.0
+    assert ch.stats()["dropped"] == 1
+
+
+# ---------------------------------------------------------------------------
+# replay dedup (at-least-once delivery, no double execution)
+# ---------------------------------------------------------------------------
+
+def _pumped(lib, hits, **faults):
+    """A DestinationExecutor served over a loopback pair, the host side
+    wrapped in a FaultyChannel; returns (executor, faulty_channel, stop)."""
+    ex = DestinationExecutor({"lm": _counting_lib(lib, hits)}, name="pump",
+                             **{k: v for k, v in faults.items()
+                                if k in ("replay_cache",)})
+    host, dest = LoopbackChannel.pair()
+    ch = FaultyChannel(host, seed=CHAOS_SEED,
+                       **{k: v for k, v in faults.items()
+                          if k != "replay_cache"})
+    stop = threading.Event()
+
+    def pump():
+        while not stop.is_set():
+            try:
+                raw = dest.recv(timeout=0.05)
+            except TimeoutError:
+                continue
+            except ChannelClosed:
+                return
+            dest.send(ex.handle(raw))
+
+    threading.Thread(target=pump, daemon=True).start()
+    return ex, ch, stop
+
+
+def test_dropped_ack_retry_replays_instead_of_reexecuting(lm):
+    """The killed-ack schedule on the sync path: the destination executed
+    the call, only the response was lost.  The same-call_id retry answers
+    from the replay LRU — executed exactly once, result identical."""
+    cfg, params, lib = lm
+    hits = {}
+    # wire ops: has_model recv=1, put_model recv=2, run reply recv=3 dropped
+    ex, ch, stop = _pumped(lib, hits, drop_recvs=(3,))
+    try:
+        rt = HostRuntime(ch, timeout=0.4)
+        sess = AvecSession(cfg, params, rt, "lm")
+        sess.ensure_model()
+        args = {"tokens": np.zeros((1, 4), np.int32)}
+        with pytest.raises(TimeoutError):
+            rt.run(sess.fp, "prefill", args, call_id="ack-1")
+        assert hits["prefill"] == 1         # it DID execute
+        rmeta, out = rt._rpc({"op": "run", "fp": sess.fp, "fn": "prefill",
+                              "codec": "raw", "batchable": False,
+                              "call_id": "ack-1"}, args)
+        assert rmeta.get("replayed") is True
+        assert hits["prefill"] == 1         # dedup: no second execution
+        assert ex.replay_hits == 1
+        assert out["logits"].shape[0] == 1
+    finally:
+        stop.set()
+        ch.close()
+
+
+def test_duplicated_delivery_executes_once_and_flags_replay(lm):
+    """The duplicated-request schedule: the run frame arrives twice; the
+    second delivery is served from the replay cache."""
+    cfg, params, lib = lm
+    hits = {}
+    ex, ch, stop = _pumped(lib, hits, dup_sends=(3,))   # run frame is send 3
+    try:
+        rt = HostRuntime(ch, timeout=1.0)
+        sess = AvecSession(cfg, params, rt, "lm")
+        sess.ensure_model()
+        out = rt.run(sess.fp, "prefill",
+                     {"tokens": np.zeros((1, 4), np.int32)}, call_id="dup-1")
+        assert out["logits"].shape[0] == 1
+        # the duplicate's response is still in the queue: replayed, not rerun
+        m2, _ = unpack_message(ch.recv(timeout=1.0))
+        assert m2.get("replayed") is True
+        assert hits["prefill"] == 1 and ex.replay_hits == 1
+    finally:
+        stop.set()
+        ch.close()
+
+
+def test_delayed_ack_is_slow_but_single_execution(lm):
+    cfg, params, lib = lm
+    hits = {}
+    ex, ch, stop = _pumped(lib, hits, delay_recvs=(3,), delay_s=0.05)
+    try:
+        rt = HostRuntime(ch, timeout=2.0)
+        sess = AvecSession(cfg, params, rt, "lm")
+        sess.ensure_model()
+        t0 = time.perf_counter()
+        rt.run(sess.fp, "prefill", {"tokens": np.zeros((1, 4), np.int32)},
+               call_id="slow-1")
+        assert time.perf_counter() - t0 >= 0.05
+        assert hits["prefill"] == 1 and ex.replay_hits == 0
+    finally:
+        stop.set()
+        ch.close()
+
+
+def test_replay_lru_bounds_memory_and_clears_with_session(lm):
+    cfg, params, lib = lm
+    hits = {}
+    ex = DestinationExecutor({"lm": _counting_lib(lib, hits)}, name="lru",
+                             replay_cache=2)
+    rt = HostRuntime(DirectChannel(ex))
+    sess = AvecSession(cfg, params, rt, "lm")
+    sess.ensure_model()
+    args = {"tokens": np.zeros((1, 4), np.int32)}
+
+    def run(cid):
+        return rt._rpc({"op": "run", "fp": sess.fp, "fn": "prefill",
+                        "codec": "raw", "batchable": False,
+                        "call_id": cid}, args)[0]
+
+    run("c-1")
+    assert run("c-1").get("replayed") is True
+    run("c-2")
+    run("c-3")                          # LRU capacity 2: c-1 evicted
+    assert run("c-1").get("replayed") is None
+    assert hits["prefill"] == 4         # c-1, c-2, c-3, re-executed c-1
+    assert ex.replay_hits == 1
+    rt.drop(sess.fp)                    # dropping the session clears its LRU
+    assert sess.fp not in ex._replay
+
+
+# ---------------------------------------------------------------------------
+# zero-downtime drain
+# ---------------------------------------------------------------------------
+
+def test_drain_control_op_gates_admission_and_advertises(lm):
+    cfg, params, lib = lm
+    ex = DestinationExecutor({"lm": lib}, name="solo")
+    rt = HostRuntime(DirectChannel(ex))
+    sess = AvecSession(cfg, params, rt, "lm")
+    sess.ensure_model()
+    reply = rt.ping()
+    assert reply["draining"] is False and reply["replay_dedup"] is True
+    assert avec.Capabilities.from_ping(reply).draining is False
+    res = rt.drain()
+    assert res["draining"] is True and res["pending"] == 0
+    with pytest.raises(DestinationDraining) as ei:
+        rt.run(sess.fp, "prefill", {"tokens": np.zeros((1, 4), np.int32)})
+    assert ei.value.destination == "solo"
+    # alive while bleeding: ping advertises it, snapshot still serves
+    assert avec.Capabilities.from_ping(rt.ping()).draining is True
+    rt.snapshot(sess.fp)
+    assert rt.drain(enable=False)["draining"] is False
+    rt.run(sess.fp, "prefill", {"tokens": np.zeros((1, 4), np.int32)})
+
+
+def test_drain_rehomes_midstream_to_warm_standby_zero_loss(lm):
+    """Drain-during-burst on the sync facade path: the drained node bounces
+    the next call, the session promotes its warm standby (reason=drain, no
+    state rebuild), and the decode stream stays byte-identical.  The
+    drained node stays healthy — just not routable."""
+    cfg, params, lib = lm
+    hits = {n: {} for n in ("edge-a", "edge-b")}
+    executors = {n: DestinationExecutor({"lm": _counting_lib(lib, hits[n])},
+                                        name=n)
+                 for n in ("edge-a", "edge-b")}
+    targets = [(dataclasses.replace(JETSON_TX2, name=n), ex)
+               for n, ex in executors.items()]
+    with avec.connect(targets) as client:
+        sess = client.session(cfg, params, "lm", destination="edge-a")
+        prompt = [5, 17, 3, 99, 42, 7]
+        want = generate_sequential(cfg, params, prompt, 6, max_len=32)
+        sess.call("prefill", {"tokens": np.asarray([prompt], np.int32)})
+        got = [want[0]]
+        for step in range(1, 6):
+            if step == 3:
+                # the replica group warmed the standby off snapshot traffic
+                assert sess._replica.standby == "edge-b"
+                assert sess._replica.standby_step == sess._shadow.snapshot_step
+                assert client.runtime("edge-a").drain()["draining"] is True
+            out = sess.call("decode",
+                            {"tokens": np.asarray([[got[-1]]], np.int32)})
+            got.append(int(np.argmax(out["logits"][0, 0, :cfg.vocab_size])))
+        assert got == want                          # zero lost results
+        assert sess.destination == "edge-b"
+        assert sess.rehomes == 1
+        assert sess.last_rehome["reason"] == "drain"
+        assert sess.last_rehome["warm"] is True     # promoted, not rebuilt
+        assert hits["edge-b"].get("prefill", 0) == 0
+        assert client.migration.migrations[-1]["reason"] == "drain"
+        # draining is not death: healthy, un-routable, still serving control
+        va = client.registry.get("edge-a")
+        assert va.healthy and va.draining
+        assert [v.name for v in client.registry.routable()] == ["edge-b"]
+        assert client.refresh_capabilities("edge-a").draining is True
+        assert executors["edge-a"].pending_work() == 0
+        assert executors["edge-a"].drain(timeout_s=0.5)["drained"] is True
+        client.runtime("edge-a").snapshot(sess.fp)  # control plane still up
+
+
+def test_drain_bleeds_coalesced_queue_without_dropping_inflight(lm):
+    """Coalesced path: work admitted before the drain flip completes through
+    the QoS drain; work submitted after bounces typed.  drain() blocks until
+    pending hits zero."""
+    cfg, params, lib = lm
+    started, release = threading.Event(), threading.Event()
+    gated = dict(lib)
+    inner_score = lib["score"]
+
+    def slow_score(p, s, a):
+        started.set()
+        release.wait(5.0)
+        return inner_score(p, s, a)
+
+    gated["score"] = slow_score
+    ex = DestinationExecutor({"lm": gated}, name="co", coalesce=True,
+                             coalesce_window_s=0.001)
+    try:
+        rt0 = HostRuntime(DirectChannel(ex))
+        sess = AvecSession(cfg, params, rt0, "lm")
+        sess.ensure_model()
+        args = {"tokens": np.zeros((1, 8), np.int32),
+                "targets": np.zeros((1, 8), np.int32)}
+        results, errors = {}, {}
+
+        def worker(key):
+            rt = HostRuntime(DirectChannel(ex))
+            try:
+                results[key] = rt.run(sess.fp, "score", args, batchable=True)
+            except Exception as e:  # noqa: BLE001 — recorded for asserts
+                errors[key] = e
+
+        t1 = threading.Thread(target=worker, args=("pre",))
+        t1.start()
+        assert started.wait(3.0)            # admitted and executing
+        ex.draining = True
+        assert ex.pending_work() >= 1
+        t2 = threading.Thread(target=worker, args=("post",))
+        t2.start()
+        t2.join(3.0)
+        assert isinstance(errors.get("post"), DestinationDraining)
+        drained = {}
+        t3 = threading.Thread(
+            target=lambda: drained.update(ex.drain(timeout_s=5.0)))
+        t3.start()
+        release.set()                       # let the in-flight batch finish
+        t1.join(5.0)
+        t3.join(5.0)
+        assert "pre" in results             # admitted work was never dropped
+        assert drained == {"drained": True, "pending": 0}
+        assert ex.pending_work() == 0
+    finally:
+        release.set()
+        ex.shutdown()
+
+
+def test_sharded_map_reroutes_around_draining_shard(lm):
+    cfg, params, lib = lm
+    executors = {n: DestinationExecutor({"lm": lib}, name=n)
+                 for n in ("sh-a", "sh-b")}
+    targets = [(dataclasses.replace(JETSON_TX2, name=n), ex)
+               for n, ex in executors.items()]
+    rng = np.random.default_rng(CHAOS_SEED + 3)
+    reqs = {f"r{i}": {
+        "tokens": rng.integers(0, cfg.vocab_size, (1, 8)).astype(np.int32),
+        "targets": rng.integers(0, cfg.vocab_size, (1, 8)).astype(np.int32)}
+        for i in range(6)}
+    with avec.connect(targets, shadow_every=0) as client:
+        sess = client.session(cfg, params, "lm", destination="sh-a")
+        ref = sess.map("score", reqs)
+        executors["sh-b"].draining = True   # flips under the router's feet
+        out = sess.map("score", reqs)
+        st = sess.last_map_stats
+        assert st["drained"] == ["sh-b"] and st["rerouted"] >= 1
+        for rid in reqs:
+            for x, y in zip(jax.tree_util.tree_leaves(ref[rid]),
+                            jax.tree_util.tree_leaves(out[rid])):
+                np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                           rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# warm failover chaos (pipelined TCP path, injected schedules)
+# ---------------------------------------------------------------------------
+
+def _tcp_pair(lib, hits):
+    """Two TCP destinations; edge-a dialed through a FaultyChannel the test
+    mutates mid-stream.  Returns (executors, servers, targets, chans)."""
+    executors, servers = {}, {}
+    for n in ("edge-a", "edge-b"):
+        ex = DestinationExecutor({"lm": _counting_lib(lib, hits[n])}, name=n)
+        executors[n] = ex
+        servers[n] = TCPServer(ex.handle).start()
+    chans = []
+
+    def dial_a():
+        ch = FaultyChannel(TCPChannel.connect(
+            "127.0.0.1", servers["edge-a"].port), seed=CHAOS_SEED)
+        chans.append(ch)
+        return ch
+
+    targets = [
+        (dataclasses.replace(JETSON_TX2, name="edge-a"), dial_a),
+        (dataclasses.replace(JETSON_TX2, name="edge-b"),
+         lambda: TCPChannel.connect("127.0.0.1", servers["edge-b"].port)),
+    ]
+    return executors, servers, targets, chans
+
+
+def test_chaos_killed_ack_warm_failover_loses_no_acked_results(lm):
+    """Kill the primary mid-burst AFTER it executed a call (the ack is
+    dropped, then the link dies mid-frame).  Acceptance: the decode stream
+    is byte-identical (zero acked results lost), at most the in-flight
+    window (1 call) is re-executed cluster-wide, and the re-home is warm —
+    the standby never rebuilds from host (no prefill on edge-b)."""
+    cfg, params, lib = lm
+    hits = {n: {} for n in ("edge-a", "edge-b")}
+    executors, servers, targets, chans = _tcp_pair(lib, hits)
+    try:
+        with avec.connect(targets, timeout=1.5) as client:
+            sess = client.session(cfg, params, "lm", destination="edge-a")
+            prompt = [5, 17, 3, 99, 42, 7]
+            want = generate_sequential(cfg, params, prompt, 7, max_len=32)
+            sess.call("prefill", {"tokens": np.asarray([prompt], np.int32)})
+            got = [want[0]]
+            ch = chans[0]
+            for step in range(1, 7):
+                if step == 4:
+                    # shadow freshness bound: the standby is at most one
+                    # snapshot behind, and with shadow_every=1 it is exact
+                    assert sess._replica.standby == "edge-b"
+                    assert (sess._replica.standby_step
+                            == sess._shadow.snapshot_step == sess._steps)
+                    st = ch.stats()
+                    # next run executes but its ack is dropped; the probe
+                    # ping that follows dies mid-frame: a true node kill
+                    # from the host's point of view, AFTER execution
+                    ch.drop_recvs.add(st["recvs"] + 1)
+                    ch.partial_send_at = st["sends"] + 2
+                out = sess.call("decode",
+                                {"tokens": np.asarray([[got[-1]]], np.int32)})
+                got.append(int(np.argmax(out["logits"][0, 0,
+                                                       :cfg.vocab_size])))
+            assert got == want                      # zero acked results lost
+            assert sess.destination == "edge-b"
+            assert sess.last_rehome["reason"] == "failover"
+            assert sess.last_rehome["warm"] is True
+            # re-execution bounded by the in-flight window: the killed call
+            # ran on edge-a (unacked) and once more on edge-b = 6 + 1
+            a, b = hits["edge-a"]["decode"], hits["edge-b"]["decode"]
+            assert a == 4 and b == 3 and a + b == 6 + 1
+            assert hits["edge-b"].get("prefill", 0) == 0    # warm re-home
+            assert ch.stats()["dropped"] >= 1
+            assert ch.stats()["partial"] == 1
+            va = client.registry.get("edge-a")
+            assert not va.healthy and va.quarantined
+            assert client.migration.migrations[-1]["warm"] is True
+    finally:
+        for s in servers.values():
+            s.stop()
+
+
+def test_chaos_blackhole_failover_reexecutes_only_unacked_call(lm):
+    """Blackhole the primary mid-burst BEFORE the request lands: the killed
+    call never executed anywhere, so the cluster-wide execution count is
+    exactly N — failover re-executes nothing that was acked and nothing
+    that never ran."""
+    cfg, params, lib = lm
+    hits = {n: {} for n in ("edge-a", "edge-b")}
+    executors, servers, targets, chans = _tcp_pair(lib, hits)
+    try:
+        with avec.connect(targets, timeout=0.75) as client:
+            sess = client.session(cfg, params, "lm", destination="edge-a")
+            prompt = [5, 17, 3, 99, 42, 7]
+            want = generate_sequential(cfg, params, prompt, 7, max_len=32)
+            sess.call("prefill", {"tokens": np.asarray([prompt], np.int32)})
+            got = [want[0]]
+            ch = chans[0]
+            for step in range(1, 7):
+                if step == 4:
+                    # every frame from here on vanishes in both directions
+                    ch.blackhole_after = ch.stats()["sends"] + 1
+                out = sess.call("decode",
+                                {"tokens": np.asarray([[got[-1]]], np.int32)})
+                got.append(int(np.argmax(out["logits"][0, 0,
+                                                       :cfg.vocab_size])))
+            assert got == want
+            assert sess.destination == "edge-b"
+            assert sess.last_rehome["warm"] is True
+            a, b = hits["edge-a"]["decode"], hits["edge-b"]["decode"]
+            assert a == 3 and b == 3 and a + b == 6    # exactly-N executions
+            assert hits["edge-b"].get("prefill", 0) == 0
+            assert ch.stats()["blackholed"] >= 2
+    finally:
+        for s in servers.values():
+            s.stop()
