@@ -293,14 +293,22 @@ def recv_ring_probe(frames: int = 160, frame_floats: int = 128 * 1024,
     import threading
     import tracemalloc
 
+    from repro.analysis.sanitize import LeaseTracker
     from repro.core import memory as memory_mod
     from repro.core import transport as transport_mod
     from repro.core.executor import PipelinedHostRuntime
-    from repro.core.memory import BufferPool, release_buffer
+    from repro.core.memory import (BufferPool, release_buffer,
+                                   set_lease_tracker)
     from repro.core.serialization import (frame_request_id, pack_message,
                                           unpack_message)
     from repro.core.transport import (ChannelClosed, TCPChannel, _recv_frame,
                                       _send_frame)
+
+    # every lease the probe's pools hand out is tracked with its acquisition
+    # site; the pool section must end with zero live (the sanitizer proof of
+    # leak-freedom, stronger than the acquired==released counter identity)
+    tracker = LeaseTracker()
+    prev_tracker = set_lease_tracker(tracker)
 
     def build(pooled: bool):
         a, b = socket.socketpair()
@@ -432,6 +440,15 @@ def recv_ring_probe(frames: int = 160, frame_floats: int = 128 * 1024,
         ch.close()
         peer.close()
 
+    # every rig is down: poll live leases to zero with a short gc grace
+    # (pinned zero-copy views release from weakref finalizers)
+    deadline = time.monotonic() + 5.0
+    while tracker.live_count() and time.monotonic() < deadline:
+        gc.collect()
+        time.sleep(0.02)
+    live_at_teardown = tracker.live_count()
+    set_lease_tracker(prev_tracker)
+
     frame_bytes = frame_floats * 4
     return {
         "frames": frames,
@@ -447,6 +464,8 @@ def recv_ring_probe(frames: int = 160, frame_floats: int = 128 * 1024,
         "recv_throughput_mbps": frames * frame_bytes / pooled_wall / 1e6,
         "baseline_throughput_mbps": frames * frame_bytes / unpooled_wall / 1e6,
         "throughput_ratio_vs_unpooled": unpooled_wall / pooled_wall,
+        "live_leases_at_teardown": live_at_teardown,
+        "leases_tracked": tracker.acquired,
         "pool": steady,
     }
 

@@ -1,0 +1,52 @@
+"""avecheck — repo-specific correctness tooling for the AVEC data plane.
+
+Two halves, one invariant set:
+
+* **Static analyzer** (``python -m repro.analysis src/``): AST rules that
+  mechanically check the contracts PRs 1–6 established by convention —
+  lease balance on every path, lock discipline on ``# guarded-by:``
+  annotated fields, no blocking calls under a state lock, and wire-error
+  table completeness.  See :mod:`repro.analysis.rules`.
+* **Runtime sanitizer** (``AVEC_SANITIZE=1``): a :class:`LeaseTracker`
+  recording acquisition-site tracebacks and asserting zero live leases at
+  teardown, a lock-order recorder that detects cycles across the
+  runtime/coalescer/migration/cluster locks, and a protocol state-machine
+  channel wrapper validating every frame.  See
+  :mod:`repro.analysis.sanitize` and :mod:`repro.analysis.protocol`.
+
+Only :mod:`repro.analysis.sanitize` may be imported from ``repro.core``
+modules (it is stdlib-only); the analyzer and the protocol validator pull
+in heavier dependencies and load lazily.
+"""
+from __future__ import annotations
+
+import importlib
+
+__all__ = [
+    "LeaseTracker", "LeaseLeak", "LockOrderRecorder", "LockOrderCycle",
+    "ValidatingChannel", "ProtocolViolation", "run_paths",
+]
+
+_LAZY = {
+    "LeaseTracker": ("repro.analysis.sanitize", "LeaseTracker"),
+    "LeaseLeak": ("repro.analysis.sanitize", "LeaseLeak"),
+    "LockOrderRecorder": ("repro.analysis.sanitize", "LockOrderRecorder"),
+    "LockOrderCycle": ("repro.analysis.sanitize", "LockOrderCycle"),
+    "ValidatingChannel": ("repro.analysis.protocol", "ValidatingChannel"),
+    "ProtocolViolation": ("repro.analysis.protocol", "ProtocolViolation"),
+    "run_paths": ("repro.analysis.checker", "run_paths"),
+}
+
+
+def __getattr__(name: str):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro.analysis' has no attribute {name!r}")
+    value = getattr(importlib.import_module(mod_name), attr)
+    globals()[name] = value
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

@@ -47,7 +47,6 @@ extraction, replacing the deprecated positional ``args[2]`` convention.
 from __future__ import annotations
 
 import itertools
-import threading
 import time
 import uuid
 from dataclasses import dataclass, field, replace
@@ -56,6 +55,7 @@ from typing import Any, Callable, Optional
 import jax
 import numpy as np
 
+from repro.analysis import sanitize as _sanitize
 from repro.core.cache import model_fingerprint
 from repro.core.cluster import ClusterMembership, ReplicaGroup
 from repro.core.costmodel import Workload
@@ -268,14 +268,16 @@ class AvecClient:
         self.registry = registry or AcceleratorRegistry()
         self.scheduler = DeviceAwareScheduler(
             self.registry, load_penalty=self.policy.load_penalty)
-        self._lock = threading.Lock()
-        self._dial_lock = threading.RLock()   # serializes check-then-dial
-        self._closed = False
-        self._endpoints: dict[str, Endpoint] = {}
-        self._caps: dict[str, Capabilities] = {}
-        self._runtimes: dict[str, HostRuntime] = {}
-        self._codecs: dict[str, str] = {}
-        self._siblings: dict[tuple, AvecSession] = {}
+        self._lock = _sanitize.make_lock("AvecClient._lock")
+        # serializes check-then-dial; deliberately NOT guarded-by registered:
+        # dialing does socket I/O under it by design
+        self._dial_lock = _sanitize.make_rlock("AvecClient._dial_lock")
+        self._closed = False                            # guarded-by: _lock
+        self._endpoints: dict[str, Endpoint] = {}       # fixed after __init__
+        self._caps: dict[str, Capabilities] = {}        # guarded-by: _lock
+        self._runtimes: dict[str, HostRuntime] = {}     # guarded-by: _lock
+        self._codecs: dict[str, str] = {}               # guarded-by: _lock
+        self._siblings: dict[tuple, AvecSession] = {}   # guarded-by: _lock
         self.migration = MigrationManager(self.registry, self.scheduler,
                                           self._runtime_for)
         # elastic membership view over the same registry: consistent-hash

@@ -25,8 +25,9 @@ from __future__ import annotations
 
 import bisect
 import hashlib
-import threading
 from typing import Callable, Iterable, Optional
+
+from repro.analysis import sanitize as _sanitize
 
 
 def _hash64(key: str) -> int:
@@ -109,11 +110,11 @@ class ClusterMembership:
 
     def __init__(self, registry, *, vnodes: int = 64) -> None:
         self.registry = registry
-        self._lock = threading.Lock()
-        self._ring = ConsistentHashRing(vnodes=vnodes)
-        self._placements: dict[str, str] = {}    # key -> current home
-        self.syncs = 0
-        self.moves = 0
+        self._lock = _sanitize.make_lock("ClusterMembership._lock")
+        self._ring = ConsistentHashRing(vnodes=vnodes)  # guarded-by: _lock
+        self._placements: dict[str, str] = {}    # guarded-by: _lock (key -> current home)
+        self.syncs = 0                           # guarded-by: _lock
+        self.moves = 0                           # guarded-by: _lock
 
     def sync(self) -> dict:
         """Reconcile ring membership with ``registry.routable()``.  Returns

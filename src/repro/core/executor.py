@@ -108,6 +108,7 @@ from typing import Any, Callable
 import jax
 import numpy as np
 
+from repro.analysis import sanitize as _sanitize
 from repro.core.cache import ModelCache
 from repro.core.memory import BufferLease, release_buffer
 from repro.core.serialization import (PROTOCOL_VERSION, SUPPORTED_CODECS,
@@ -154,6 +155,23 @@ def _remote_exception(rmeta: dict) -> RemoteError:
     if rmeta.get("draining"):
         return DestinationDraining(msg, rmeta.get("name", "?"))
     return RemoteError(msg)
+
+
+def wire_error_meta(exc: BaseException) -> dict:
+    """The typed-flag metadata for an exception crossing the wire — the
+    inverse of :func:`_remote_exception` (see serialization.WIRE_ERRORS).
+
+    ``DestinationExecutor.handle`` merges this into its generic error
+    response so a :class:`TenantThrottled`/:class:`DestinationDraining`
+    raised *inside* op handling (a coalesced future, a nested call) reaches
+    the client as the same typed exception it would have been as a direct
+    ``_op_run`` response — not as a flag-less generic ``RemoteError``."""
+    if isinstance(exc, TenantThrottled):
+        return {"throttled": True, "tenant": exc.tenant,
+                "retry_after_s": exc.retry_after_s}
+    if isinstance(exc, DestinationDraining):
+        return {"draining": True, "name": exc.destination}
+    return {}
 
 
 def _clone_channel_exc(exc: BaseException) -> BaseException:
@@ -364,9 +382,9 @@ class _Coalescer:
         self._execute = execute     # (key, metas, trees) -> list[(meta, tree)]
         self.window_s = window_s
         self.max_batch = max_batch
-        self._cv = threading.Condition()
-        self._q = _QoSQueues(tenant_weights)
-        self._stopped = False
+        self._cv = _sanitize.make_condition("_Coalescer._cv")
+        self._q = _QoSQueues(tenant_weights)   # guarded-by: _cv
+        self._stopped = False                  # guarded-by: _cv
         self.stats = {"batches": 0, "requests": 0, "max_batch": 0}
         self._worker = threading.Thread(target=self._loop, daemon=True)
         self._worker.start()
@@ -388,7 +406,7 @@ class _Coalescer:
             if lease is not None:
                 lease.retain()      # ownership transfers with the enqueue
             tenant = meta.get("tenant") or DEFAULT_TENANT
-            self._q.push(tenant, meta.get("qos"),
+            self._q.push(tenant, meta.get("qos"),   # avecheck: handoff
                          (key, meta, tree, fut, lease))
             self._cv.notify_all()
         return fut.result()
@@ -496,17 +514,18 @@ class DestinationExecutor:
         self.draining = False      # zero-downtime drain: stop admitting runs
         self.tenant_max_inflight = int(tenant_max_inflight)
         self.tenant_max_bytes = float(tenant_max_bytes)
-        self._adm_lock = threading.Lock()
-        self._adm: dict[str, dict] = {}     # tenant -> admission counters
+        self._adm_lock = _sanitize.make_lock("DestinationExecutor._adm_lock")
+        self._adm: dict[str, dict] = {}     # guarded-by: _adm_lock (tenant -> admission counters)
         self._tls = threading.local()       # per-connection-thread recv lease
         # idempotent replay guard: per-session LRU of recently served
         # call ids -> completed responses.  A failover retry of a call the
         # destination DID finish (only the ack was lost) replays the cached
         # result instead of executing twice.
         self.replay_cache = int(replay_cache)
-        self._replay_lock = threading.Lock()
-        self._replay: dict[str, collections.OrderedDict] = {}
-        self.replay_hits = 0
+        self._replay_lock = _sanitize.make_lock(
+            "DestinationExecutor._replay_lock")
+        self._replay: dict[str, collections.OrderedDict] = {}  # guarded-by: _replay_lock
+        self.replay_hits = 0                                   # guarded-by: _replay_lock
         self._coalescer = (_Coalescer(self._run_batch, coalesce_window_s,
                                       max_coalesce, tenant_weights)
                            if coalesce else None)
@@ -582,7 +601,7 @@ class DestinationExecutor:
                 lru.popitem(last=False)
 
     # -- per-tenant admission control ----------------------------------
-    def _adm_entry(self, tenant: str) -> dict:
+    def _adm_entry(self, tenant: str) -> dict:  # avecheck: ignore[lock] -- callers hold _adm_lock
         st = self._adm.get(tenant)
         if st is None:
             st = self._adm[tenant] = {"inflight": 0, "bytes_inflight": 0,
@@ -650,7 +669,8 @@ class DestinationExecutor:
             return pack_message(rmeta, rtree, codec=codec, request_id=rid)
         except Exception as e:  # noqa: BLE001 — protocol boundary
             return pack_message({"ok": False, "error": str(e),
-                                 "trace": traceback.format_exc()},
+                                 "trace": traceback.format_exc(),
+                                 **wire_error_meta(e)},
                                 request_id=rid)
         finally:
             self._tls.lease = None
@@ -1039,19 +1059,19 @@ class PipelinedHostRuntime(HostRuntime):
                          throttle_retries=throttle_retries)
         self.max_in_flight = max_in_flight
         self.adaptive_window = adaptive_window
-        self._window = _WindowController(max_in_flight)
-        self._pending: dict[int, Future] = {}
-        self._track: dict[int, tuple[float, int]] = {}  # rid -> (t0, depth)
-        self._cv = threading.Condition()
-        self._receiving = False
-        self._slock = threading.Lock()
+        self._window = _WindowController(max_in_flight)  # guarded-by: _cv
+        self._pending: dict[int, Future] = {}            # guarded-by: _cv
+        self._track: dict[int, tuple[float, int]] = {}   # guarded-by: _cv (rid -> (t0, depth))
+        self._cv = _sanitize.make_condition("PipelinedHostRuntime._cv")
+        self._receiving = False                          # guarded-by: _cv
+        self._slock = _sanitize.make_lock("PipelinedHostRuntime._slock")
         self._rid = itertools.count(1)
         self._closed = False
-        self._broken: BaseException | None = None
-        self._send_stalls = 0
-        self._sends_resumed = 0
-        self._recv_retries = 0
-        self._requests_completed = 0
+        self._broken: BaseException | None = None        # guarded-by: _cv
+        self._send_stalls = 0                            # guarded-by: _cv
+        self._sends_resumed = 0                          # guarded-by: _cv
+        self._recv_retries = 0                           # guarded-by: _cv
+        self._requests_completed = 0                     # guarded-by: _cv
 
     # ------------------------------------------------------------------
     def submit(self, meta: dict, tree=None, codec: str = "raw") -> Future:
@@ -1079,7 +1099,7 @@ class PipelinedHostRuntime(HostRuntime):
         rid = next(self._rid)
         fut = self.make_future()
 
-        def _admit() -> None:
+        def _admit() -> None:  # avecheck: ignore[lock] -- runs as on_pass under _pump_until's cv
             # window check and pending insertion are one atomic step under
             # the cv, or concurrent submitters could exceed the window; the
             # (send time, queue depth) snapshot feeds the window controller
@@ -1272,7 +1292,7 @@ class PipelinedHostRuntime(HostRuntime):
             self._fail_pending(e)
             raise
         try:
-            self._dispatch(data)
+            self._dispatch(data)    # avecheck: handoff
         except BaseException as e:
             self._fail_pending(e)
             raise

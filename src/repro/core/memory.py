@@ -50,10 +50,29 @@ whole consumer chain above it is already lease-correct.
 """
 from __future__ import annotations
 
-import threading
 import weakref
 
 import numpy as np
+
+from repro.analysis import sanitize as _sanitize
+
+#: installed LeaseTracker hook (``repro.analysis.sanitize``) or None.
+#: Auto-installed when AVEC_SANITIZE=1; benches/tests may install their own
+#: via :func:`set_lease_tracker` to prove leak-freedom without the env flag.
+_TRACKER = (_sanitize.global_lease_tracker() if _sanitize.enabled() else None)
+
+
+def set_lease_tracker(tracker) -> object:
+    """Install ``tracker`` (a :class:`repro.analysis.sanitize.LeaseTracker`
+    or None) as the pool-wide acquisition/release hook; returns the
+    previous hook so callers can restore it."""
+    global _TRACKER
+    prev, _TRACKER = _TRACKER, tracker
+    return prev
+
+
+def get_lease_tracker():
+    return _TRACKER
 
 #: default slab sizing: 8 x 4 MiB per pool, allocated lazily — an idle
 #: channel costs nothing.  4 MiB fits the paper's own workload (an OpenPose
@@ -156,6 +175,8 @@ class BufferLease:
             pool._live -= 1
             if self._slab is not None:
                 self._slab.live -= 1
+        if _TRACKER is not None:
+            _TRACKER.on_release(self)
 
     def pin_ndarray(self, buf: memoryview, dtype, shape) -> np.ndarray:
         """Decode one leaf in place: a read-only :class:`PooledView` over
@@ -163,7 +184,7 @@ class BufferLease:
         last array referencing it is garbage-collected."""
         arr = PooledView(shape, dtype=dtype, buffer=buf)
         self.retain()
-        weakref.finalize(arr, self.release)
+        weakref.finalize(arr, self.release)   # avecheck: handoff
         arr.flags.writeable = False
         return arr
 
@@ -181,19 +202,19 @@ class BufferPool:
         self.slab_bytes = int(slab_bytes)
         self.max_slabs = max(int(slabs), 1)
         self.name = name
-        self._lock = threading.RLock()
-        self._slabs: list[_Slab] = []
-        self._cursor = 0
-        self._live = 0              # leases with refs > 0
-        self.acquired = 0
-        self.released = 0
-        self.hits = 0
-        self.miss_oversize = 0
-        self.miss_exhausted = 0
-        self.wraps = 0
-        self.slab_allocs = 0
-        self.fallback_bytes = 0
-        self.over_released = 0
+        self._lock = _sanitize.make_rlock(f"BufferPool[{name}]._lock")
+        self._slabs: list[_Slab] = []   # guarded-by: _lock
+        self._cursor = 0                # guarded-by: _lock
+        self._live = 0                  # guarded-by: _lock (leases with refs > 0)
+        self.acquired = 0               # guarded-by: _lock
+        self.released = 0               # guarded-by: _lock
+        self.hits = 0                   # guarded-by: _lock
+        self.miss_oversize = 0          # guarded-by: _lock
+        self.miss_exhausted = 0         # guarded-by: _lock
+        self.wraps = 0                  # guarded-by: _lock
+        self.slab_allocs = 0            # guarded-by: _lock
+        self.fallback_bytes = 0         # guarded-by: _lock
+        self.over_released = 0          # guarded-by: _lock
         #: owner is done acquiring (e.g. its connection closed); aggregators
         #: may fold and drop the pool once outstanding() reaches zero
         self.retired = False
@@ -224,9 +245,11 @@ class BufferPool:
                     self.hits += 1
             self.acquired += 1
             self._live += 1
-            return lease
+        if _TRACKER is not None:
+            _TRACKER.on_acquire(lease, self.name, nbytes)
+        return lease
 
-    def _wrap(self) -> _Slab | None:
+    def _wrap(self) -> _Slab | None:  # avecheck: ignore[lock] -- caller (acquire) holds _lock
         """Rewind or advance to a fully-released slab (resetting its bump
         cursor), growing the ring while under ``max_slabs``.  The CURRENT
         slab is checked first: in the steady sequential case (each frame
@@ -250,7 +273,7 @@ class BufferPool:
             return s
         return None
 
-    def _fallback(self, nbytes: int) -> BufferLease:
+    def _fallback(self, nbytes: int) -> BufferLease:  # avecheck: ignore[lock] -- caller (acquire) holds _lock
         lease = BufferLease(self, memoryview(bytearray(nbytes)), None)
         self.fallback_bytes += nbytes       # only counted once allocated
         return lease

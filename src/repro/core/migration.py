@@ -16,6 +16,7 @@ import threading
 import time
 from typing import Callable, Optional
 
+from repro.analysis import sanitize as _sanitize
 from repro.core.executor import HostRuntime, RemoteError
 from repro.core.interception import AvecSession
 from repro.core.scheduler import DeviceAwareScheduler
@@ -55,12 +56,12 @@ class HeartbeatMonitor:
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self.failed = threading.Event()
-        self._lock = threading.Lock()
-        self._pings = 0             # successful pings
-        self._missed = 0            # total missed pings (lifetime)
-        self._consecutive = 0       # current miss streak
-        self._failures = 0          # times declared dead
-        self._flaps = 0             # dead -> alive recoveries
+        self._lock = _sanitize.make_lock("HeartbeatMonitor._lock")
+        self._pings = 0             # guarded-by: _lock (successful pings)
+        self._missed = 0            # guarded-by: _lock (total missed, lifetime)
+        self._consecutive = 0       # guarded-by: _lock (current miss streak)
+        self._failures = 0          # guarded-by: _lock (times declared dead)
+        self._flaps = 0             # guarded-by: _lock (dead -> alive recoveries)
 
     def start(self) -> "HeartbeatMonitor":
         self._thread.start()

@@ -62,7 +62,6 @@ Codecs (beyond-paper, the slow-link levers):
 from __future__ import annotations
 
 import struct
-import threading
 from dataclasses import dataclass, field
 from typing import Any, Iterator
 
@@ -71,6 +70,7 @@ import numpy as np
 
 import zlib
 
+from repro.analysis import sanitize as _sanitize
 from repro.core.memory import BufferLease
 
 try:  # container images may lack zstandard; gate it (no new deps)
@@ -116,6 +116,27 @@ PROTOCOL_VERSION = 2
 # always listed: the encoder falls back to zlib and records the algorithm in
 # the leaf meta, so any peer of the same protocol version can decode it.
 SUPPORTED_CODECS = ("raw", "zstd", "int8")
+
+# Typed wire errors: the complete serialization error table.  Every error
+# class a destination can surface over the wire (RemoteError and its
+# subclasses, plus ProtocolError for unframeable streams) declares here
+# which response-meta flag marks it (``None`` = not meta-carried; raised
+# from framing itself) and the client-side disposition:
+#
+#   retry     — transient; back off ``retry_after_s`` and resubmit
+#   rehome    — destination is going away; re-place on another node
+#   reraise   — application-level failure; surface to the caller
+#   teardown  — the stream is unframeable; close the channel, re-dial
+#
+# ``executor._remote_exception`` maps the flags back to typed exceptions on
+# the client; ``avecheck``'s wire rule checks this table stays complete,
+# mapped, and handled (see repro/analysis/rules.py).
+WIRE_ERRORS = {
+    "RemoteError":         {"flag": "error",     "disposition": "reraise"},
+    "TenantThrottled":     {"flag": "throttled", "disposition": "retry"},
+    "DestinationDraining": {"flag": "draining",  "disposition": "rehome"},
+    "ProtocolError":       {"flag": None,        "disposition": "teardown"},
+}
 
 
 # ---------------------------------------------------------------------------
@@ -358,12 +379,12 @@ class DataTransfer:
     Thread-safe: pipelined runtimes and sharded ``map`` gathers record
     concurrently from multiple threads, and ``n += x`` on a plain attribute
     is a read-modify-write race that silently loses bytes."""
-    sent: int = 0
-    received: int = 0
-    by_category: dict = field(default_factory=dict)
+    sent: int = 0                                   # guarded-by: _lock
+    received: int = 0                               # guarded-by: _lock
+    by_category: dict = field(default_factory=dict)  # guarded-by: _lock
 
     def __post_init__(self) -> None:
-        self._lock = threading.Lock()
+        self._lock = _sanitize.make_lock("DataTransfer._lock")
 
     def record(self, n: int, direction: str = "sent", category: str = "args") -> None:
         with self._lock:

@@ -35,6 +35,7 @@ import threading
 import time
 from typing import Callable, Optional
 
+from repro.analysis import sanitize as _sanitize
 from repro.core.memory import BufferLease, BufferPool, release_buffer
 from repro.core.serialization import Frame
 
@@ -305,8 +306,11 @@ class TCPChannel(Channel):
         ``False`` to disable pooling (legacy fresh ``bytearray`` per
         frame)."""
         self._sock = sock
-        self._lock = threading.Lock()
-        self._rlock = threading.Lock()
+        # pure I/O mutexes (serialize whole-frame send/recv) — deliberately
+        # NOT guarded-by registered: blocking socket calls under them are by
+        # design, and no shared counters hide behind them
+        self._lock = _sanitize.make_lock("TCPChannel._lock")
+        self._rlock = _sanitize.make_lock("TCPChannel._rlock")
         self._broken = False
         self._hdr = bytearray(8)    # reusable length-prefix scratch
         if isinstance(pool, BufferPool):
@@ -508,12 +512,12 @@ class TCPServer:
             self._pool_kw["slab_bytes"] = int(pool_slab_bytes)
         if pool_slabs is not None:
             self._pool_kw["slabs"] = int(pool_slabs)
-        self._pools: list[BufferPool] = []
+        self._pools: list[BufferPool] = []  # guarded-by: _lock
         # counters of reaped (closed + fully released) connection pools, so
         # pool_stats() stays lifetime-accurate without retaining every dead
         # connection's slab memory forever
         self._pool_totals = {"pools": 0, "acquired": 0, "released": 0,
-                             "hits": 0, "misses": 0, "wraps": 0}
+                             "hits": 0, "misses": 0, "wraps": 0}  # guarded-by: _lock
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind((host, port))
@@ -521,9 +525,9 @@ class TCPServer:
         self.port = self._sock.getsockname()[1]
         self.join_timeout = join_timeout
         self._stop = threading.Event()
-        self._lock = threading.Lock()
-        self._threads: list[threading.Thread] = []
-        self._conns: list[socket.socket] = []
+        self._lock = _sanitize.make_lock("TCPServer._lock")
+        self._threads: list[threading.Thread] = []  # guarded-by: _lock
+        self._conns: list[socket.socket] = []       # guarded-by: _lock
         self._thread = threading.Thread(target=self._serve, daemon=True)
 
     def start(self) -> "TCPServer":
@@ -776,13 +780,13 @@ class FaultyChannel(Channel):
         self.delay_send_p = delay_send_p
         self.partial_send_at = partial_send_at
         self.blackhole_after = blackhole_after
-        self._sends = 0
-        self._recvs = 0
-        self._blackholed = False
-        self._forced_broken = False
-        self._lock = threading.Lock()
+        self._sends = 0             # guarded-by: _lock
+        self._recvs = 0             # guarded-by: _lock
+        self._blackholed = False    # guarded-by: _lock
+        self._forced_broken = False # guarded-by: _lock
+        self._lock = _sanitize.make_lock("FaultyChannel._lock")
         self.faults = {"dropped": 0, "duplicated": 0, "delayed": 0,
-                       "partial": 0, "blackholed": 0}
+                       "partial": 0, "blackholed": 0}  # guarded-by: _lock
 
     @property
     def broken(self) -> bool:

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitize as _sanitize
 from repro.core.executor import (DestinationDraining, TenantThrottled,
                                  _throttle_backoff)
 from repro.core.memory import detach_tree
@@ -210,8 +211,9 @@ class PipelinedOffloadFrontend:
         self.tenant = tenant
         self.qos = qos
         self.detach_results = detach_results
-        self.submitted = 0
-        self._pool: Optional[ThreadPoolExecutor] = None
+        self._lock = _sanitize.make_lock("PipelinedOffloadFrontend._lock")
+        self.submitted = 0                              # guarded-by: _lock
+        self._pool: Optional[ThreadPoolExecutor] = None  # guarded-by: _lock
 
     def submit(self, args: Any) -> Future:
         """Async submit; Future resolves to the output tree (waiting on it
@@ -222,15 +224,18 @@ class PipelinedOffloadFrontend:
         requests on THIS destination serialize, but shards on other
         destinations still overlap — the facade's multi-destination ``map``
         stays concurrent end to end."""
-        self.submitted += 1
+        with self._lock:
+            self.submitted += 1
         if hasattr(self.runtime, "run_async"):
             inner = self.runtime.run_async(self.fp, self.fn, args,
                                            batchable=self.batchable,
                                            tenant=self.tenant, qos=self.qos)
             return self.runtime.chain(inner, self._materialize)
-        if self._pool is None:
-            self._pool = ThreadPoolExecutor(max_workers=1)
-        return self._pool.submit(self._run_sync, args)
+        with self._lock:    # lazy worker: don't double-create under racers
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(max_workers=1)
+            pool = self._pool
+        return pool.submit(self._run_sync, args)
 
     def _materialize(self, meta: dict, tree: Any) -> Any:
         return detach_tree(tree) if self.detach_results else tree
@@ -278,9 +283,10 @@ class PipelinedOffloadFrontend:
         return {"submitted": self.submitted, **rt_stats}
 
     def close(self) -> None:
-        if self._pool is not None:
-            self._pool.shutdown(wait=False)
-            self._pool = None
+        with self._lock:
+            pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown(wait=False)
 
 
 class ShardedOffloadFrontend:
@@ -306,23 +312,31 @@ class ShardedOffloadFrontend:
         self.frontends = list(frontends)
         self.names = list(names) if names is not None else [
             f"shard{i}" for i in range(len(frontends))]
-        self.assigned = [0] * len(self.frontends)
-        self.drained: set = set()       # shard indices retired by a drain
-        self.rerouted = 0               # requests moved off a draining shard
+        self._lock = _sanitize.make_lock("ShardedOffloadFrontend._lock")
+        self.assigned = [0] * len(self.frontends)  # guarded-by: _lock
+        self.drained: set = set()   # guarded-by: _lock (shards retired by a drain)
+        self.rerouted = 0           # guarded-by: _lock (moved off a draining shard)
 
-    def _active(self) -> list:
+    def _active(self) -> list:  # callers hold _lock
         return [i for i in range(len(self.frontends))
                 if i not in self.drained]
 
+    def _route(self) -> int:
+        """Pick the least-loaded admitting shard and count the assignment
+        (one atomic route decision — concurrent submitters must not both
+        pick the momentarily-least-loaded shard)."""
+        with self._lock:
+            active = self._active()
+            if not active:
+                raise DestinationDraining(
+                    "all shards are draining", destination="*")
+            i = min(active, key=lambda j: self.assigned[j])
+            self.assigned[i] += 1
+            return i
+
     def submit(self, args: Any) -> Future:
         """Route one request to the least-loaded admitting shard."""
-        active = self._active()
-        if not active:
-            raise DestinationDraining(
-                "all shards are draining", destination="*")
-        i = min(active, key=lambda j: self.assigned[j])
-        self.assigned[i] += 1
-        return self.frontends[i].submit(args)
+        return self.frontends[self._route()].submit(args)
 
     def _gather_one(self, i: int, fut: Future, args: Any):
         """Resolve one shard future; a draining bounce retires the shard
@@ -333,13 +347,11 @@ class ShardedOffloadFrontend:
                     return self.frontends[i].gather(fut, args)
                 return fut.result()
             except DestinationDraining:
-                self.drained.add(i)
-                active = self._active()
-                if not active:
-                    raise           # nowhere left to re-route
-                self.rerouted += 1
-                i = min(active, key=lambda j: self.assigned[j])
-                self.assigned[i] += 1
+                with self._lock:
+                    self.drained.add(i)
+                i = self._route()   # raises when nowhere left to re-route
+                with self._lock:
+                    self.rerouted += 1
                 fut = self.frontends[i].submit(args)
 
     def map(self, requests: dict) -> dict:
@@ -351,10 +363,12 @@ class ShardedOffloadFrontend:
         rr = itertools.cycle(range(len(self.frontends)))
         futs = {}
         for rid, args in requests.items():
-            i = next(rr)
-            while i in self.drained and len(self.drained) < len(self.frontends):
-                i = next(rr)    # skip shards already known to be draining
-            self.assigned[i] += 1
+            with self._lock:
+                i = next(rr)
+                while i in self.drained \
+                        and len(self.drained) < len(self.frontends):
+                    i = next(rr)    # skip shards already known draining
+                self.assigned[i] += 1
             futs[rid] = (i, self.frontends[i].submit(args))
         return {rid: self._gather_one(i, fut, requests[rid])
                 for rid, (i, fut) in futs.items()}

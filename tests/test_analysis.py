@@ -1,0 +1,616 @@
+"""avecheck: static-analyzer rules, runtime sanitizer, wire-error
+round-trips, and the validating protocol channel."""
+import textwrap
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.analysis.checker import Project, SourceFile, run_paths
+from repro.analysis import rules as R
+from repro.analysis.protocol import (ProtocolViolation, ValidatingChannel,
+                                     known_ops)
+from repro.analysis.sanitize import (LeaseLeak, LeaseTracker, LockOrderCycle,
+                                     LockOrderRecorder, TrackedLock,
+                                     make_lock)
+from repro.core.executor import (DestinationDraining, DestinationExecutor,
+                                 HostRuntime, RemoteError, TenantThrottled,
+                                 _remote_exception, wire_error_meta)
+from repro.core.memory import (BufferPool, get_lease_tracker,
+                               set_lease_tracker)
+from repro.core.serialization import WIRE_ERRORS, pack_message
+from repro.core.transport import (DirectChannel, FaultyChannel,
+                                  LoopbackChannel, ProtocolError)
+
+
+def _sf(code: str, path: str = "mod.py") -> SourceFile:
+    return SourceFile(path, textwrap.dedent(code))
+
+
+def _findings(rule_fn, code: str):
+    sf = _sf(code)
+    return rule_fn(sf, Project([sf]))
+
+
+def _active(findings):
+    return [f for f in findings if not f.suppressed]
+
+
+# ---------------------------------------------------------------------------
+# lease rule
+# ---------------------------------------------------------------------------
+
+def test_lease_rule_fires_on_unbalanced_acquire():
+    bad = """
+    def f(pool):
+        lease = pool.acquire(64)
+        lease.view[0] = 1
+    """
+    found = _active(_findings(R.lease_rule, bad))
+    assert len(found) == 1 and found[0].rule == "lease"
+    assert "never released" in found[0].message
+
+
+def test_lease_rule_fires_on_exception_unsafe_release():
+    bad = """
+    def f(pool, ch):
+        lease = pool.acquire(64)
+        ch.process(lease)
+        lease.release()
+    """
+    found = _active(_findings(R.lease_rule, bad))
+    assert len(found) == 1
+    assert "exception paths" in found[0].message
+
+
+def test_lease_rule_good_patterns_are_silent():
+    good = """
+    def via_finally(pool):
+        lease = pool.acquire(64)
+        try:
+            use(lease)
+        finally:
+            lease.release()
+
+    def via_return(pool):
+        lease = pool.acquire(64)
+        return lease
+
+    def via_both_paths(pool):
+        lease = pool.acquire(64)
+        try:
+            out = decode(lease)
+            lease.release()
+        except Exception:
+            lease.release()
+            raise
+        return out
+
+    def via_helper(pool):
+        lease = pool.acquire(64)
+        try:
+            use(lease)
+        finally:
+            release_buffer(lease)
+    """
+    assert _active(_findings(R.lease_rule, good)) == []
+
+
+def test_lease_rule_handoff_marker_silences():
+    code = """
+    def f(pool, q):
+        lease = pool.acquire(64)
+        q.put(lease)    # avecheck: handoff
+    """
+    assert _active(_findings(R.lease_rule, code)) == []
+
+
+def test_lease_rule_retain_counts_as_acquisition():
+    bad = """
+    def f(lease):
+        lease.retain()
+        use(lease)
+    """
+    found = _active(_findings(R.lease_rule, bad))
+    assert len(found) == 1 and found[0].rule == "lease"
+
+
+def test_lease_rule_suppression_silences_and_is_marked_used():
+    code = """
+    def f(pool):
+        lease = pool.acquire(64)    # avecheck: ignore[lease] -- test fixture
+        stash(lease)
+    """
+    sf = _sf(code)
+    found = R.lease_rule(sf, Project([sf]))
+    assert len(found) == 1 and found[0].suppressed
+    assert all(s.used for s in sf.suppressions.values())
+
+
+# ---------------------------------------------------------------------------
+# lock rule
+# ---------------------------------------------------------------------------
+
+_LOCKED_CLASS = """
+import threading
+
+class C:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0      # guarded-by: _lock
+
+    def good(self):
+        with self._lock:
+            self.count += 1
+
+    def bad(self):
+        self.count += 1
+"""
+
+
+def test_lock_rule_fires_outside_lock_only():
+    found = _active(_findings(R.lock_rule, _LOCKED_CLASS))
+    assert len(found) == 1 and found[0].rule == "lock"
+    assert "bytes_sent bug class" in found[0].message
+    # the finding points into bad(), not good() or __init__
+    sf = _sf(_LOCKED_CLASS)
+    assert "self.count += 1" in sf.source.splitlines()[found[0].line - 1]
+
+
+def test_lock_rule_covers_mutating_method_calls():
+    code = """
+    class C:
+        def __init__(self):
+            self._lock = object()
+            self.items = []     # guarded-by: _lock
+
+        def bad(self):
+            self.items.append(1)
+    """
+    found = _active(_findings(R.lock_rule, code))
+    assert len(found) == 1 and ".append()" in found[0].message
+
+
+def test_lock_rule_def_line_suppression_covers_function():
+    code = """
+    class C:
+        def __init__(self):
+            self._lock = object()
+            self.n = 0      # guarded-by: _lock
+
+        def helper(self):  # avecheck: ignore[lock] -- caller holds _lock
+            self.n += 1
+            self.n += 2
+    """
+    found = _findings(R.lock_rule, code)
+    assert len(found) == 2 and all(f.suppressed for f in found)
+
+
+# ---------------------------------------------------------------------------
+# block rule
+# ---------------------------------------------------------------------------
+
+def test_block_rule_fires_on_io_under_state_lock():
+    code = """
+    class C:
+        def __init__(self, sock):
+            self._lock = object()
+            self.n = 0      # guarded-by: _lock
+            self.sock = sock
+
+        def bad(self):
+            with self._lock:
+                self.sock.sendall(b"x")
+    """
+    found = _active(_findings(R.block_rule, code))
+    assert len(found) == 1 and found[0].rule == "block"
+    assert ".sendall()" in found[0].message
+
+
+def test_block_rule_cv_wait_is_sanctioned():
+    code = """
+    class C:
+        def __init__(self):
+            self._cv = object()
+            self.n = 0      # guarded-by: _cv
+
+        def ok(self):
+            with self._cv:
+                while not self.n:
+                    self._cv.wait(0.1)
+    """
+    assert _active(_findings(R.block_rule, code)) == []
+
+
+def test_block_rule_ignores_pure_io_mutexes():
+    # a lock with NO guarded-by registrations is an I/O mutex: blocking
+    # under it is its job (TCPChannel._lock)
+    code = """
+    class C:
+        def __init__(self, sock):
+            self._lock = object()
+            self.sock = sock
+
+        def ok(self):
+            with self._lock:
+                self.sock.sendall(b"x")
+    """
+    assert _active(_findings(R.block_rule, code)) == []
+
+
+# ---------------------------------------------------------------------------
+# wire rule + meta findings (via run_paths on a tmp tree)
+# ---------------------------------------------------------------------------
+
+def test_wire_rule_flags_missing_table_entry():
+    err = _sf("""
+    class RemoteError(Exception):
+        pass
+
+    class NewTyped(RemoteError):
+        pass
+    """, "errors.py")
+    table = _sf("""
+    WIRE_ERRORS = {
+        "RemoteError": {"flag": "error", "disposition": "reraise"},
+    }
+
+    def _remote_exception(rmeta):
+        return rmeta.get("error")
+
+    def client():
+        try:
+            pass
+        except RemoteError:
+            raise
+    """, "serialization.py")
+    found = R.wire_rule(Project([err, table]))
+    assert any("NewTyped missing from the WIRE_ERRORS" in f.message
+               for f in found)
+
+
+def test_wire_rule_flags_unmapped_flag_and_missing_handler():
+    err = _sf("""
+    class RemoteError(Exception):
+        pass
+
+    class Typed(RemoteError):
+        pass
+    """, "errors.py")
+    table = _sf("""
+    WIRE_ERRORS = {
+        "RemoteError": {"flag": "error", "disposition": "reraise"},
+        "Typed": {"flag": "special", "disposition": "retry"},
+    }
+
+    def _remote_exception(rmeta):
+        return rmeta.get("error")
+
+    def client():
+        try:
+            pass
+        except RemoteError:
+            raise
+    """, "serialization.py")
+    msgs = [f.message for f in R.wire_rule(Project([err, table]))]
+    assert any("not mapped by executor._remote_exception" in m for m in msgs)
+    assert any("no client-side `except` handler" in m for m in msgs)
+
+
+def test_wire_rule_resolves_exception_tuple_aliases():
+    code = _sf("""
+    class RemoteError(Exception):
+        pass
+
+    _FAILOVER = (RemoteError, OSError)
+
+    WIRE_ERRORS = {
+        "RemoteError": {"flag": "error", "disposition": "reraise"},
+    }
+
+    def _remote_exception(rmeta):
+        return rmeta.get("error")
+
+    class S:
+        def client(self):
+            try:
+                pass
+            except _FAILOVER:
+                raise
+    """, "serialization.py")
+    assert R.wire_rule(Project([code])) == []
+
+
+def test_run_paths_meta_findings(tmp_path):
+    (tmp_path / "m.py").write_text(textwrap.dedent("""
+        def f(pool):
+            lease = pool.acquire(4)     # avecheck: ignore[lease]
+            stash(lease)
+
+        def g():                        # avecheck: ignore[lock] -- unused here
+            pass
+
+        def h():    # avecheck: ignore[bogusrule] -- no such rule
+            pass
+    """))
+    msgs = [f.message for f in run_paths([str(tmp_path)]) if not f.suppressed]
+    assert any("without justification" in m for m in msgs)
+    assert any("unused suppression" in m for m in msgs)
+    assert any("unknown rule" in m for m in msgs)
+
+
+def test_repo_baseline_is_clean():
+    """The shipped tree passes its own analyzer with zero unsuppressed
+    findings — the CI gate, asserted from the suite too."""
+    import repro
+    root = repro.__path__[0]
+    assert [str(f) for f in run_paths([root]) if not f.suppressed] == []
+
+
+# ---------------------------------------------------------------------------
+# runtime sanitizer: lease tracker
+# ---------------------------------------------------------------------------
+
+def test_lease_tracker_seeded_leak_reports_acquisition_stack():
+    tr = LeaseTracker()
+    token = object()
+    tr.on_acquire(token, "probe-pool", 4096)
+    with pytest.raises(LeaseLeak) as ei:
+        tr.assert_quiescent()
+    msg = str(ei.value)
+    assert "probe-pool" in msg and "4096" in msg
+    assert "test_analysis.py" in msg      # the acquisition site, by name
+    tr.on_release(token)
+    tr.assert_quiescent()
+
+
+def test_lease_tracker_through_buffer_pool():
+    tr = LeaseTracker()
+    prev = set_lease_tracker(tr)
+    try:
+        pool = BufferPool(name="tracked", slab_bytes=1 << 12, slabs=2)
+        lease = pool.acquire(128)
+        assert tr.live_count() == 1
+        lease.release()
+        assert tr.live_count() == 0
+        tr.assert_quiescent()
+        leak = pool.acquire(64)
+        with pytest.raises(LeaseLeak):
+            tr.assert_quiescent()
+        leak.release()
+    finally:
+        set_lease_tracker(prev)
+    assert get_lease_tracker() is prev
+
+
+def test_lease_tracker_baseline_tolerates_preexisting():
+    tr = LeaseTracker()
+    old = object()
+    tr.on_acquire(old, "old-pool", 1)
+    tr.assert_quiescent(baseline=1)       # pre-existing lease tolerated
+    fresh = object()
+    tr.on_acquire(fresh, "new-pool", 2)
+    with pytest.raises(LeaseLeak):
+        tr.assert_quiescent(baseline=1)
+
+
+# ---------------------------------------------------------------------------
+# runtime sanitizer: lock-order recorder
+# ---------------------------------------------------------------------------
+
+def test_lock_order_seeded_cycle_detected():
+    rec = LockOrderRecorder()
+    a = TrackedLock(threading.Lock(), "A", rec)
+    b = TrackedLock(threading.Lock(), "B", rec)
+    with a:
+        with b:
+            pass
+    rec.assert_no_cycles()                # A->B alone is fine
+    with b:
+        with a:
+            pass
+    with pytest.raises(LockOrderCycle) as ei:
+        rec.assert_no_cycles()
+    assert "A -> B -> A" in str(ei.value) or "B -> A -> B" in str(ei.value)
+
+
+def test_lock_order_rlock_reentry_is_not_a_cycle():
+    rec = LockOrderRecorder()
+    r = TrackedLock(threading.RLock(), "R", rec)
+    with r:
+        with r:
+            pass
+    assert rec.edges() == []
+    rec.assert_no_cycles()
+
+
+def test_make_lock_plain_by_default_tracked_when_enabled(monkeypatch):
+    monkeypatch.delenv("AVEC_SANITIZE", raising=False)
+    assert not isinstance(make_lock("x"), TrackedLock)
+    monkeypatch.setenv("AVEC_SANITIZE", "1")
+    lk = make_lock("x")
+    assert isinstance(lk, TrackedLock)
+    with lk:
+        assert lk._inner.locked()
+
+
+# ---------------------------------------------------------------------------
+# wire-error round-trips: every typed error, deterministic disposition
+# ---------------------------------------------------------------------------
+
+def _tiny_executor(fn, **caps):
+    ex = DestinationExecutor({"tiny": {"fn": fn}}, **caps)
+    HostRuntime(DirectChannel(ex)).put_model(
+        "fp", "tiny", {"w": np.zeros(1, np.float32)})
+    return ex
+
+
+def test_wire_errors_table_matches_mapper():
+    """WIRE_ERRORS is the ground truth: every flagged entry round-trips
+    through _remote_exception to the declared class."""
+    for name, entry in WIRE_ERRORS.items():
+        if entry["flag"] in (None, "error"):
+            continue
+        exc = _remote_exception({"ok": False, "error": "x",
+                                 entry["flag"]: True})
+        assert type(exc).__name__ == name
+
+
+def test_tenant_throttled_roundtrips_from_inside_handler():
+    """A TenantThrottled raised inside op handling (not by admission)
+    reaches the client typed, with tenant + retry hint intact — the
+    wire_error_meta path."""
+    def bounce(params, state, args):
+        raise TenantThrottled("be patient", tenant="t0", retry_after_s=0.02)
+
+    ex = _tiny_executor(bounce)
+    rt = HostRuntime(DirectChannel(ex), throttle_retries=0)
+    with pytest.raises(TenantThrottled) as ei:
+        rt.run("fp", "fn", {"x": np.zeros(2, np.float32)})
+    assert ei.value.tenant == "t0"
+    assert ei.value.retry_after_s == pytest.approx(0.02)
+    # disposition: retry — a runtime WITH retries recovers when the
+    # throttle clears
+    assert WIRE_ERRORS["TenantThrottled"]["disposition"] == "retry"
+
+
+def test_destination_draining_roundtrips_from_inside_handler():
+    def exiting(params, state, args):
+        raise DestinationDraining("going away", destination="edge-9")
+
+    ex = _tiny_executor(exiting)
+    rt = HostRuntime(DirectChannel(ex))
+    with pytest.raises(DestinationDraining) as ei:
+        rt.run("fp", "fn", {"x": np.zeros(2, np.float32)})
+    assert ei.value.destination == "edge-9"
+    assert WIRE_ERRORS["DestinationDraining"]["disposition"] == "rehome"
+
+
+def test_generic_remote_error_reraises_untyped():
+    def boom(params, state, args):
+        raise ValueError("application bug")
+
+    ex = _tiny_executor(boom)
+    rt = HostRuntime(DirectChannel(ex))
+    with pytest.raises(RemoteError) as ei:
+        rt.run("fp", "fn", {"x": np.zeros(2, np.float32)})
+    assert not isinstance(ei.value, (TenantThrottled, DestinationDraining))
+    assert "application bug" in str(ei.value)
+    assert WIRE_ERRORS["RemoteError"]["disposition"] == "reraise"
+
+
+def test_wire_error_meta_is_remote_exception_inverse():
+    t = TenantThrottled("m", tenant="a", retry_after_s=0.5)
+    back = _remote_exception({"error": "m", **wire_error_meta(t)})
+    assert isinstance(back, TenantThrottled)
+    assert back.tenant == "a" and back.retry_after_s == 0.5
+    d = DestinationDraining("m", destination="n1")
+    back = _remote_exception({"error": "m", **wire_error_meta(d)})
+    assert isinstance(back, DestinationDraining) and back.destination == "n1"
+    assert wire_error_meta(ValueError("x")) == {}
+
+
+def test_protocol_error_disposition_is_teardown():
+    assert WIRE_ERRORS["ProtocolError"]["disposition"] == "teardown"
+    assert WIRE_ERRORS["ProtocolError"]["flag"] is None
+    assert issubclass(ProtocolError, Exception)
+
+
+# ---------------------------------------------------------------------------
+# validating protocol channel
+# ---------------------------------------------------------------------------
+
+def test_validating_channel_clean_roundtrip():
+    a, b = LoopbackChannel.pair()
+    client = ValidatingChannel(a, side="client")
+    server = ValidatingChannel(b, side="server")
+    client.send(pack_message({"op": "ping"}, request_id=3))
+    server.recv(1.0)
+    server.send(pack_message({"ok": True}, request_id=3))
+    client.recv(1.0)
+    assert client.stats() == {"frames_validated": 2, "violations": 0,
+                              "outstanding": 0}
+    assert server.stats()["violations"] == 0
+
+
+def test_validating_channel_rejects_unknown_op():
+    a, _ = LoopbackChannel.pair()
+    ch = ValidatingChannel(a, side="client")
+    with pytest.raises(ProtocolViolation, match="bogus"):
+        ch.send(pack_message({"op": "bogus"}, request_id=1))
+    assert ch.stats()["violations"] == 1
+
+
+def test_validating_channel_rejects_unmatched_response():
+    a, b = LoopbackChannel.pair()
+    client = ValidatingChannel(a, side="client")
+    b.send(pack_message({"ok": True}, request_id=99))   # never requested
+    with pytest.raises(ProtocolViolation, match="no outstanding request"):
+        client.recv(1.0)
+
+
+def test_validating_channel_rejects_rid_reuse():
+    a, _ = LoopbackChannel.pair()
+    ch = ValidatingChannel(a, side="client")
+    ch.send(pack_message({"op": "ping"}, request_id=5))
+    with pytest.raises(ProtocolViolation, match="reuses in-flight rid"):
+        ch.send(pack_message({"op": "ping"}, request_id=5))
+
+
+def test_validating_channel_releases_rejected_pooled_frame():
+    pool = BufferPool(name="vc", slab_bytes=1 << 14, slabs=2)
+    bad = bytes(pack_message({"op": "bogus"}, request_id=1))
+    lease = pool.acquire(len(bad))
+    lease.view[:len(bad)] = bad
+
+    class OneShot:
+        def recv(self, timeout=None):
+            return lease
+
+        broken = False
+
+    ch = ValidatingChannel(OneShot(), side="server")
+    with pytest.raises(ProtocolViolation):
+        ch.recv()
+    assert pool.stats()["outstanding"] == 0    # released before raising
+
+
+def test_validating_channel_composes_with_faulty_channel():
+    """Chaos composition: validation rides a delaying FaultyChannel without
+    false positives — full RPC through a real executor over loopback."""
+    def fn(params, state, args):
+        return {"y": np.asarray(args["x"]) + 1.0}
+
+    ex = DestinationExecutor({"tiny": {"fn": fn}})
+    host, dest = LoopbackChannel.pair()
+    vc = ValidatingChannel(
+        FaultyChannel(host, seed=7, delay_recvs=(2,), delay_s=0.01),
+        side="client")
+    stop = threading.Event()
+
+    def pump():
+        while not stop.is_set():
+            try:
+                raw = dest.recv(timeout=0.05)
+            except TimeoutError:
+                continue
+            except Exception:  # noqa: BLE001 — channel closed: pump done
+                return
+            dest.send(ex.handle(raw))
+
+    threading.Thread(target=pump, daemon=True).start()
+    try:
+        rt = HostRuntime(vc)
+        rt.put_model("fp", "tiny", {"w": np.zeros(1, np.float32)})
+        out = rt.run("fp", "fn", {"x": np.zeros((1, 2), np.float32)})
+        np.testing.assert_array_equal(out["y"], np.ones((1, 2), np.float32))
+        st = vc.stats()
+        assert st["violations"] == 0
+        assert st["frames_validated"] >= 4      # ≥2 requests + 2 responses
+    finally:
+        stop.set()
+
+
+def test_known_ops_tracks_executor_dispatch():
+    assert {"ping", "run", "put_model", "drain"} <= known_ops()

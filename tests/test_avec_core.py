@@ -19,6 +19,7 @@ from repro.core import (AcceleratorRegistry, AvecProfiler, AvecSession,
 from repro.core.costmodel import (amortized_speedup, native_cycle_time,
                                   offload_cycle_time, speedup)
 from repro.core.library import make_model_library
+from repro.core.memory import release_buffer
 from repro.core.serialization import (DataTransfer, eq1_bytes, pack_message,
                                       tree_wire_bytes, unpack_message)
 from repro.core.transport import (Channel, LoopbackChannel, SimulatedChannel,
@@ -98,7 +99,9 @@ def test_loopback_and_tcp_roundtrip():
 
     server = TCPServer(lambda req: req[::-1]).start()
     ch = TCPChannel.connect("127.0.0.1", server.port)
-    assert ch.request(b"abc", timeout=5) == b"cba"
+    got = ch.request(b"abc", timeout=5)
+    assert got == b"cba"
+    release_buffer(got)
     ch.close()
     server.stop()
 

@@ -13,6 +13,7 @@ from _fakes import flaky
 from repro.core.executor import (DestinationExecutor, HostRuntime,
                                  PipelinedHostRuntime, RemoteError,
                                  _WindowController)
+from repro.core.memory import release_buffer
 from repro.core.serialization import (Frame, frame_preamble_ok,
                                       frame_request_id, pack_message,
                                       unpack_message)
@@ -144,7 +145,9 @@ def test_tcp_recv_timeout_not_sticky():
     with pytest.raises(TimeoutError):
         ch.recv(timeout=0.05)
     assert ch._sock.gettimeout() == prev          # not sticky
-    assert bytes(ch.request(b"ok", timeout=5)) == b"ok"   # stream intact
+    got = ch.request(b"ok", timeout=5)
+    assert bytes(got) == b"ok"                    # stream intact
+    release_buffer(got)
     ch.close()
     server.stop()
 
@@ -167,7 +170,9 @@ def test_tcp_server_reaps_client_threads():
     server = TCPServer(lambda req: req).start()
     for _ in range(5):
         ch = TCPChannel.connect("127.0.0.1", server.port)
-        assert bytes(ch.request(b"hi", timeout=5)) == b"hi"
+        got = ch.request(b"hi", timeout=5)
+        assert bytes(got) == b"hi"
+        release_buffer(got)
         ch.close()
     deadline = time.monotonic() + 5.0
     while server.live_client_threads() > 0 and time.monotonic() < deadline:
@@ -193,6 +198,7 @@ def test_tcp_vectored_frame_roundtrip():
     meta, out = unpack_message(resp)
     np.testing.assert_array_equal(out["a"], ex_tree["a"])
     np.testing.assert_array_equal(out["b"][2], ex_tree["b"][2])
+    release_buffer(resp)                # base ref: views keep their own pins
     ch.close()
     server.stop()
 
@@ -278,7 +284,7 @@ def test_pipelined_close_fails_pending():
     rt = PipelinedHostRuntime(host_ch, max_in_flight=2)
     fut = rt.submit({"op": "ping"})
     rt.close()
-    with pytest.raises(Exception):
+    with pytest.raises(ChannelClosed):
         fut.result(timeout=5)
 
 

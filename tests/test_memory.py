@@ -230,7 +230,9 @@ def test_unpack_copy_true_detaches_eagerly():
     lease.release()
     assert pool.outstanding() == 0      # no pins: slab free immediately
     out["x"][0] = -1.0                  # and the copy is writable
-    assert pool.acquire(900).pooled
+    probe = pool.acquire(900)           # slab really is free for reuse
+    assert probe.pooled
+    probe.release()
 
 
 def test_derived_views_keep_the_pin():
