@@ -11,6 +11,26 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, reduced
+from repro.obs import metrics as obs_metrics
+
+
+def _runtime_metrics_snapshot(runtime) -> dict:
+    """Flat scrape of the same bound metric views the /metrics listener
+    serves (repro.obs), recorded next to a section's raw stats so
+    BENCH_dataplane.json shows the obs plane agreeing with the bench's own
+    counters (window, send_stalls, pool hit ratio...)."""
+    reg = obs_metrics.MetricsRegistry()
+    obs_metrics.bind_runtime(reg, runtime)
+    return reg.sample_values()
+
+
+def _executor_metrics_snapshot(ex) -> dict:
+    """Scrape of a destination executor's per-tenant metric views (drain
+    share, served/throttled, queue depth) — what a Prometheus scrape of the
+    destination would report at this instant."""
+    reg = obs_metrics.MetricsRegistry()
+    obs_metrics.bind_executor(reg, ex)
+    return reg.sample_values()
 
 
 def _time(fn, n: int = 5, warmup: int = 1) -> float:
@@ -189,6 +209,7 @@ def _openpose_offload_walls(frames: int,
             pipe_walls.append(pipe_pass())
         t_sync, t_pipe = min(sync_walls), min(pipe_walls)
         rt_stats = pipe_rt.stats()
+        rt_stats["metrics"] = _runtime_metrics_snapshot(pipe_rt)
         sync_rt.close()
         pipe_rt.close()
     finally:
@@ -245,6 +266,7 @@ def backpressure_probe(frames: int = 6, frame_floats: int = 128 * 1024,
         verified = verified and bool(np.array_equal(out["y"], x + 1.0))
     wall = time.perf_counter() - t0
     stats = rt.stats()
+    metrics = _runtime_metrics_snapshot(rt)
     stop.set()
     rt.close()
     t.join(timeout=5)
@@ -258,6 +280,7 @@ def backpressure_probe(frames: int = 6, frame_floats: int = 128 * 1024,
         "sends_resumed": stats["sends_resumed"],
         "window": stats["window"],
         "requests_completed": stats["requests_completed"],
+        "metrics": metrics,
     }
 
 
@@ -366,6 +389,11 @@ def recv_ring_probe(frames: int = 160, frame_floats: int = 128 * 1024,
     rig_pooled = build(pooled=True)
     rt = rig_pooled[0]
     pool = rt.channel.recv_pool
+    # metrics ENABLED during the measured window: the obs views are bound
+    # before pumping, proving the scrape-time design costs the hot path
+    # nothing (the CI ring gate compares this wall against the seed's)
+    mreg = obs_metrics.MetricsRegistry()
+    obs_metrics.bind_runtime(mreg, rt)
     pump(rt, warmup)
     gc.collect()
     before = pool.stats()
@@ -396,6 +424,7 @@ def recv_ring_probe(frames: int = 160, frame_floats: int = 128 * 1024,
     held_alloc_per_frame(rt)    # warm the ring's lazy slab growth for a
     pooled_alloc = held_alloc_per_frame(rt)     # full held window first
     steady = pool.stats()
+    metrics = mreg.sample_values()
     teardown(*rig_pooled)
     balanced = steady["acquired"] == steady["released"] \
         and steady["outstanding"] == 0
@@ -467,6 +496,7 @@ def recv_ring_probe(frames: int = 160, frame_floats: int = 128 * 1024,
         "live_leases_at_teardown": live_at_teardown,
         "leases_tracked": tracker.acquired,
         "pool": steady,
+        "metrics": metrics,
     }
 
 
@@ -528,6 +558,7 @@ def tenant_fairness_probe(weight_a: float = 3.0, weight_b: float = 1.0,
     stop.set()
     [t.join(timeout=10) for t in threads]
     stats = ex.tenant_stats
+    metrics = _executor_metrics_snapshot(ex)
     ex.shutdown()
 
     drained = {t: after.get(t, 0) - before.get(t, 0) for t in ("a", "b")}
@@ -562,6 +593,7 @@ def tenant_fairness_probe(weight_a: float = 3.0, weight_b: float = 1.0,
         "b_p95_bounded": b_p95 < p95_bound,
         "tenant_stats": {t: {k: v for k, v in s.items()}
                          for t, s in stats.items()},
+        "metrics": metrics,
     }
 
 
@@ -721,6 +753,7 @@ def dataplane_report(frames: int = 8, in_flight: int = 4) -> dict:
             "send_stalls": pipe_stats["send_stalls"],
             "wire_ema_s": pipe_stats["wire_ema_s"],
             "compute_ema_s": pipe_stats["compute_ema_s"],
+            "metrics": pipe_stats.get("metrics", {}),
         },
         "backpressure_small_sockbuf": bp,
         "recv_ring_buffer": ring,

@@ -121,6 +121,20 @@ def main() -> None:
                          f"bound {tf['p95_bound_s'] * 1e3:.0f}ms "
                          f"(low-weight tenant not starved)"))
             dr = report["drain_rehome"]
+            # obs-plane cross-check: the scrape-time metric views recorded
+            # inside each section must agree with the bench's own counters
+            pm = pipe.get("metrics", {})
+            ring_hit_key = 'avec_pool_hit_ratio{pool="recv"}'
+            ring_hit = rb.get("metrics", {}).get(ring_hit_key, "n/a")
+            rows.append(("dataplane/obs_metric_snapshots",
+                         float(sum("metrics" in report[k]
+                                   for k in ("pipelined_offload_openpose",
+                                             "backpressure_small_sockbuf",
+                                             "recv_ring_buffer",
+                                             "tenant_fairness_2way"))),
+                         f"window={pm.get('avec_inflight_window')} "
+                         f"stalls={pm.get('avec_send_stalls_total')} "
+                         f"pool_hit={ring_hit}"))
             rows.append(("dataplane/drain_rehome_p99_ratio",
                          dr["p99_ratio"],
                          f"drain p99 {dr['drain_p99_s'] * 1e3:.1f}ms vs "

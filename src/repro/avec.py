@@ -71,6 +71,7 @@ from repro.core.transport import (Channel, ChannelClosed, DirectChannel,
                                   TCPChannel)
 from repro.core.virtualization import (AcceleratorRegistry, AcceleratorSpec,
                                        CLOUD_RTX)
+from repro.obs.config import global_config
 from repro.serving.engine import (PipelinedOffloadFrontend,
                                   ShardedOffloadFrontend)
 
@@ -137,6 +138,10 @@ class Capabilities:
     #: the endpoint is bleeding its queues for a zero-downtime exit: alive
     #: (snapshot/restore/ping still served) but not admitting new work
     draining: bool = False
+    #: the destination's effective knob values (repro.obs.config — env and
+    #: constructor overrides already folded in), so clients can see and
+    #: log the remote end's actual tuning
+    config: dict = field(default_factory=dict)
     raw: dict = field(default_factory=dict, compare=False)
 
     @staticmethod
@@ -154,6 +159,7 @@ class Capabilities:
             tenant_stats=dict(reply.get("tenant_stats", {})),
             tenant_limits=dict(reply.get("tenant_limits", {})),
             draining=bool(reply.get("draining", False)),
+            config=dict(reply.get("config", {})),
             raw=dict(reply))
 
 
@@ -164,9 +170,13 @@ class ConnectPolicy:
     do)."""
     codec: str = "raw"              # requested; downgraded to peer's set
     prefer_pipelining: bool = True  # use PipelinedHostRuntime when possible
-    max_in_flight: int = 8          # pipelined window cap (adaptive below)
+    #: pipelined window cap (adaptive below).  ``None`` resolves through
+    #: the ``connect_max_in_flight`` knob (repro.obs.config) — env
+    #: ``AVEC_CONNECT_MAX_IN_FLIGHT`` overrides even an explicit value
+    max_in_flight: Optional[int] = None
     adaptive_window: bool = True
-    timeout: float = 120.0
+    #: ``None`` resolves through the ``rpc_timeout_s`` knob
+    timeout: Optional[float] = None
     copy_results: bool = False      # copy leaves at unpack (frees recv pool)
     #: hand sessions/map owning copies of results AFTER profiling, releasing
     #: recv-pool lease pins at materialization (zero-copy views otherwise;
@@ -190,9 +200,20 @@ class ConnectPolicy:
     #: mid-stream failover can restore the NEWEST state — but costs one
     #: snapshot RPC per call, which is real wire traffic for big KV
     #: caches; stateless or throughput-bound callers should pass 0.
-    shadow_every: int = 1
+    shadow_every: Optional[int] = None
     max_shards: Optional[int] = None   # session.map fan-out width (None=all)
     load_penalty: float = 1.0       # scheduler queueing weight
+
+    def __post_init__(self) -> None:
+        # resolve the knob-backed fields (env > explicit > default); a
+        # frozen dataclass mutates via object.__setattr__ here only
+        cfg = global_config()
+        object.__setattr__(self, "max_in_flight", int(cfg.resolve(
+            "connect_max_in_flight", self.max_in_flight)))
+        object.__setattr__(self, "timeout", float(cfg.resolve(
+            "rpc_timeout_s", self.timeout)))
+        object.__setattr__(self, "shadow_every", int(cfg.resolve(
+            "shadow_every", self.shadow_every)))
 
 
 @dataclass

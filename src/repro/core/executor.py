@@ -116,6 +116,8 @@ from repro.core.serialization import (PROTOCOL_VERSION, SUPPORTED_CODECS,
                                       frame_request_id, pack_message,
                                       tree_wire_bytes, unpack_message)
 from repro.core.transport import Channel, ChannelClosed, ProtocolError
+from repro.obs import metrics as _obs_metrics
+from repro.obs.config import global_config
 
 
 class RemoteError(RuntimeError):
@@ -406,8 +408,10 @@ class _Coalescer:
             if lease is not None:
                 lease.retain()      # ownership transfers with the enqueue
             tenant = meta.get("tenant") or DEFAULT_TENANT
+            # trailing element: enqueue timestamp, so traced requests can
+            # attribute their destination wait to queue vs coalesce spans
             self._q.push(tenant, meta.get("qos"),   # avecheck: handoff
-                         (key, meta, tree, fut, lease))
+                         (key, meta, tree, fut, lease, time.monotonic()))
             self._cv.notify_all()
         return fut.result()
 
@@ -440,6 +444,7 @@ class _Coalescer:
                 if self._stopped:
                     break
                 tq, key, batch = self._q.next_batch(self.max_batch)
+                picked_at = time.monotonic()
                 if len(batch) < self.max_batch:
                     # window-fill: wait for more compatible arrivals, but
                     # ONLY while nothing else (any tenant) is pending —
@@ -454,7 +459,7 @@ class _Coalescer:
                         self._cv.wait(timeout=remaining)
                         batch += self._q.take_matching(
                             tq, key, self.max_batch - len(batch))
-            self._dispatch(batch)
+            self._dispatch(batch, picked_at)
             # drop the reference before parking on the cv: a lingering
             # `batch` local would pin the last batch's trees (and their
             # recv-pool leases' leaf pins) across the worker's entire idle
@@ -462,21 +467,32 @@ class _Coalescer:
             batch = tq = key = None
         self._drain_failed()
 
-    def _dispatch(self, batch: list) -> None:
+    def _dispatch(self, batch: list, picked_at: float | None = None) -> None:
         key = batch[0][0]
         metas = [b[1] for b in batch]
         trees = [b[2] for b in batch]
+        t_exec = time.monotonic()
         try:
             results = self._execute(key, metas, trees)
             self.stats["batches"] += 1
             self.stats["requests"] += len(batch)
             self.stats["max_batch"] = max(self.stats["max_batch"], len(batch))
-            for (_, _, _, fut, _), res in zip(batch, results):
+            for item, res in zip(batch, results):
+                meta, fut, t_enq = item[1], item[3], item[5]
+                if meta.get("trace") is not None:
+                    # queue: enqueue -> DRR pick; coalesce: window fill
+                    # until execution began.  Window-fill stragglers
+                    # (enqueued after the pick) clamp queue to zero.
+                    pick = min(picked_at if picked_at is not None
+                               else t_exec, t_exec)
+                    rmeta = res[0]
+                    rmeta["queue_s"] = max(pick - t_enq, 0.0)
+                    rmeta["coalesce_s"] = max(t_exec - max(pick, t_enq), 0.0)
                 fut.set_result(res)
         except Exception as e:  # noqa: BLE001 — propagate per request
-            for _, _, _, fut, _ in batch:
-                if not fut.done():
-                    fut.set_exception(e)
+            for item in batch:
+                if not item[3].done():
+                    item[3].set_exception(e)
         finally:
             # batch dispatched (stacked leaves were copied, outputs are
             # fresh arrays): the queued request frames' bytes are done
@@ -501,19 +517,26 @@ class DestinationExecutor:
 
     def __init__(self, libraries: dict[str, dict[str, Callable]],
                  cache: ModelCache | None = None, name: str = "dest", *,
-                 coalesce: bool = False, coalesce_window_s: float = 0.002,
-                 max_coalesce: int = 8,
+                 coalesce: bool = False,
+                 coalesce_window_s: float | None = None,
+                 max_coalesce: int | None = None,
                  tenant_weights: dict | None = None,
-                 tenant_max_inflight: int = 0,
-                 tenant_max_bytes: float = 0.0,
-                 replay_cache: int = 32) -> None:
+                 tenant_max_inflight: int | None = None,
+                 tenant_max_bytes: float | None = None,
+                 replay_cache: int | None = None) -> None:
+        cfg = global_config()
         self.libraries = libraries
         self.cache = cache or ModelCache()
         self.name = name
         self.fail = False          # fault-injection switch (tests/migration)
         self.draining = False      # zero-downtime drain: stop admitting runs
-        self.tenant_max_inflight = int(tenant_max_inflight)
-        self.tenant_max_bytes = float(tenant_max_bytes)
+        self.coalesce_window_s = float(cfg.resolve("coalesce_window_s",
+                                                   coalesce_window_s))
+        self.max_coalesce = int(cfg.resolve("max_coalesce", max_coalesce))
+        self.tenant_max_inflight = int(cfg.resolve("tenant_max_inflight",
+                                                   tenant_max_inflight))
+        self.tenant_max_bytes = float(cfg.resolve("tenant_max_bytes",
+                                                  tenant_max_bytes))
         self._adm_lock = _sanitize.make_lock("DestinationExecutor._adm_lock")
         self._adm: dict[str, dict] = {}     # guarded-by: _adm_lock (tenant -> admission counters)
         self._tls = threading.local()       # per-connection-thread recv lease
@@ -521,14 +544,21 @@ class DestinationExecutor:
         # call ids -> completed responses.  A failover retry of a call the
         # destination DID finish (only the ack was lost) replays the cached
         # result instead of executing twice.
-        self.replay_cache = int(replay_cache)
+        self.replay_cache = int(cfg.resolve("replay_cache", replay_cache))
         self._replay_lock = _sanitize.make_lock(
             "DestinationExecutor._replay_lock")
         self._replay: dict[str, collections.OrderedDict] = {}  # guarded-by: _replay_lock
         self.replay_hits = 0                                   # guarded-by: _replay_lock
-        self._coalescer = (_Coalescer(self._run_batch, coalesce_window_s,
-                                      max_coalesce, tenant_weights)
+        self._coalescer = (_Coalescer(self._run_batch,
+                                      self.coalesce_window_s,
+                                      self.max_coalesce, tenant_weights)
                            if coalesce else None)
+        # per-destination metric views (scrape-time reads over the stats
+        # surfaces above; see repro.obs.metrics) — served by the `metrics`
+        # control op and launch.serve's /metrics listener
+        self.metrics = _obs_metrics.MetricsRegistry()
+        _obs_metrics.bind_executor(self.metrics, self)
+        _obs_metrics.bind_sanitizer(self.metrics)
 
     @property
     def coalesce_stats(self) -> dict:
@@ -660,6 +690,7 @@ class DestinationExecutor:
         # response is written); ops that must keep the frame's bytes alive
         # past this call — the coalescer's queue — retain it from here
         self._tls.lease = raw if isinstance(raw, BufferLease) else None
+        self._tls.t_in = time.monotonic()   # traced requests' queue span t0
         try:
             meta, tree = unpack_message(raw)
             if self.fail:
@@ -712,7 +743,33 @@ class DestinationExecutor:
             # carrying the same call_id cannot double-execute
             "draining": self.draining,
             "replay_dedup": self.replay_cache > 0,
+            # observability: the destination's effective knob values (env
+            # overrides and constructor args already folded in), so a
+            # client sees the remote end's actual tuning
+            "config": self.effective_config(),
         }, None, "raw"
+
+    def effective_config(self) -> dict:
+        """Every registered knob's effective value at this destination,
+        with this executor's resolved instance knobs folded over the
+        registry snapshot — what :meth:`_op_ping` advertises."""
+        eff = global_config().effective()
+        eff.update({
+            "coalesce_window_s": self.coalesce_window_s,
+            "max_coalesce": self.max_coalesce,
+            "tenant_max_inflight": self.tenant_max_inflight,
+            "tenant_max_bytes": self.tenant_max_bytes,
+            "replay_cache": self.replay_cache,
+        })
+        return eff
+
+    def _op_metrics(self, meta, tree):
+        """Control op: scrape this destination's metric registry over the
+        existing wire — Prometheus text plus a flat sample dict, for hosts
+        that cannot reach the /metrics HTTP listener."""
+        return {"ok": True,
+                "exposition": self.metrics.render(),
+                "samples": self.metrics.sample_values()}, None, "raw"
 
     def _op_drain(self, meta, tree):
         """Control op for zero-downtime drain.  ``{"op": "drain"}`` flips
@@ -765,6 +822,7 @@ class DestinationExecutor:
                              f"~{retry_after * 1e3:.0f}ms"}, None, "raw"
         done_ok = False
         try:
+            t_exec0 = time.monotonic()
             if self._coalescer is not None and meta.get("batchable"):
                 key = (meta["fp"], meta["fn"], codec, _batch_signature(tree))
                 rmeta, out_np = self._coalescer.submit(
@@ -773,10 +831,32 @@ class DestinationExecutor:
                 rmeta, out_np = self._run_one(meta, tree)
             done_ok = True
             if call_id is not None:
+                # cache BEFORE span stamping: a replayed response must not
+                # carry the original execution's (stale) hop timings
                 self._replay_put(meta["fp"], call_id, rmeta, out_np)
+            if meta.get("trace") is not None:
+                rmeta = self._stamp_spans(dict(rmeta), meta["trace"],
+                                          t_exec0)
             return rmeta, out_np, codec
         finally:
             self._release(tenant, nbytes, served=done_ok)
+
+    def _stamp_spans(self, rmeta: dict, trace_id, t_exec0: float) -> dict:
+        """Attach destination hop spans to a traced run response: the
+        coalescer booked queue/coalesce waits into the rmeta; the direct
+        path's queue span is frame-arrival -> execution start."""
+        spans = {}
+        if "queue_s" in rmeta:
+            spans["queue"] = rmeta.pop("queue_s")
+            spans["coalesce"] = rmeta.pop("coalesce_s", 0.0)
+        else:
+            t_in = getattr(self._tls, "t_in", None)
+            spans["queue"] = (max(t_exec0 - t_in, 0.0)
+                              if t_in is not None else 0.0)
+        spans["execute"] = float(rmeta.get("compute_s", 0.0))
+        rmeta["trace"] = trace_id
+        rmeta["spans"] = spans
+        return rmeta
 
     def _op_drop_session(self, meta, tree):
         self.cache.drop(meta["fp"])
@@ -860,21 +940,30 @@ class HostRuntime:
     :class:`TenantThrottled` admission response inside :meth:`run`."""
 
     def __init__(self, channel: Channel, codec: str = "raw",
-                 timeout: float = 120.0, copy_results: bool = False,
-                 throttle_retries: int = 4) -> None:
+                 timeout: float | None = None, copy_results: bool = False,
+                 throttle_retries: int | None = None) -> None:
+        cfg = global_config()
         self.channel = channel
         self.codec = codec
-        self.timeout = timeout
+        self.timeout = float(cfg.resolve("rpc_timeout_s", timeout))
         self.copy_results = copy_results
-        self.throttle_retries = throttle_retries
+        self.throttle_retries = int(cfg.resolve("throttle_retries",
+                                                throttle_retries))
         self.throttle_retried = 0   # TenantThrottled responses retried
         self.bytes_sent = 0
         self.bytes_received = 0
         self.last_compute_s = 0.0
         self._closed = False
 
-    def _rpc(self, meta: dict, tree=None, codec: str = "raw") -> tuple[dict, Any]:
-        req = pack_message(meta, tree, codec=codec)
+    def _rpc(self, meta: dict, tree=None, codec: str = "raw",
+             trace=None) -> tuple[dict, Any]:
+        if trace is not None:
+            meta = {**meta, "trace": trace.trace_id}
+            t0 = time.perf_counter()
+            req = pack_message(meta, tree, codec=codec)
+            trace.add("serialize", time.perf_counter() - t0)
+        else:
+            req = pack_message(meta, tree, codec=codec)
         self.bytes_sent += len(req)
         resp = self.channel.request(req, timeout=self.timeout)
         self.bytes_received += len(resp)
@@ -885,6 +974,8 @@ class HostRuntime:
             # (decoded leaf views carry their own pins; with copy_results
             # the slab recycles immediately)
             release_buffer(resp)
+        if trace is not None:
+            trace.merge(rmeta.get("spans"))
         if not rmeta.get("ok", False):
             raise _remote_exception(rmeta)
         return rmeta, rtree
@@ -921,17 +1012,19 @@ class HostRuntime:
 
     def run(self, fp: str, fn: str, args, batchable: bool = False, *,
             tenant: str | None = None, qos: dict | None = None,
-            call_id: str | None = None) -> Any:
+            call_id: str | None = None, trace=None) -> Any:
         """One execution cycle.  ``tenant``/``qos`` ride in the frame
         metadata (fair-share drain + admission at the destination); a
         :class:`TenantThrottled` response is retried with jittered backoff
-        up to ``throttle_retries`` times before surfacing."""
+        up to ``throttle_retries`` times before surfacing.  ``trace`` (a
+        :class:`repro.obs.trace.TraceRecord`) collects per-hop spans."""
         args_np = jax.tree_util.tree_map(np.asarray, args)
         rmeta = self._run_meta(fp, fn, batchable, tenant, qos, call_id)
         attempt = 0
         while True:
             try:
-                meta, out = self._rpc(rmeta, args_np, codec=self.codec)
+                meta, out = self._rpc(rmeta, args_np, codec=self.codec,
+                                      trace=trace)
                 self.last_compute_s = meta["compute_s"]
                 return out
             except TenantThrottled as e:
@@ -1052,16 +1145,20 @@ class PipelinedHostRuntime(HostRuntime):
     byte-level backpressure without the PR-1 mutual-stall deadlock."""
 
     def __init__(self, channel: Channel, codec: str = "raw",
-                 timeout: float = 120.0, copy_results: bool = False,
-                 max_in_flight: int = 4, adaptive_window: bool = True,
-                 throttle_retries: int = 4) -> None:
+                 timeout: float | None = None, copy_results: bool = False,
+                 max_in_flight: int | None = None,
+                 adaptive_window: bool | None = None,
+                 throttle_retries: int | None = None) -> None:
         super().__init__(channel, codec, timeout, copy_results,
                          throttle_retries=throttle_retries)
-        self.max_in_flight = max_in_flight
-        self.adaptive_window = adaptive_window
-        self._window = _WindowController(max_in_flight)  # guarded-by: _cv
+        cfg = global_config()
+        self.max_in_flight = int(cfg.resolve("max_in_flight", max_in_flight))
+        self.adaptive_window = bool(cfg.resolve("adaptive_window",
+                                                adaptive_window))
+        self._window = _WindowController(self.max_in_flight)  # guarded-by: _cv
         self._pending: dict[int, Future] = {}            # guarded-by: _cv
         self._track: dict[int, tuple[float, int]] = {}   # guarded-by: _cv (rid -> (t0, depth))
+        self._traces: dict[int, Any] = {}                # guarded-by: _cv (rid -> TraceRecord)
         self._cv = _sanitize.make_condition("PipelinedHostRuntime._cv")
         self._receiving = False                          # guarded-by: _cv
         self._slock = _sanitize.make_lock("PipelinedHostRuntime._slock")
@@ -1074,7 +1171,8 @@ class PipelinedHostRuntime(HostRuntime):
         self._requests_completed = 0                     # guarded-by: _cv
 
     # ------------------------------------------------------------------
-    def submit(self, meta: dict, tree=None, codec: str = "raw") -> Future:
+    def submit(self, meta: dict, tree=None, codec: str = "raw",
+               trace=None) -> Future:
         """Send one request frame; returns a Future of (rmeta, rtree).
         Blocks (pumping responses) only when the adaptive window's worth of
         requests is already outstanding (request-level backpressure), or —
@@ -1098,6 +1196,8 @@ class PipelinedHostRuntime(HostRuntime):
             raise ChannelClosed("pipelined runtime closed")
         rid = next(self._rid)
         fut = self.make_future()
+        if trace is not None:
+            meta = {**meta, "trace": trace.trace_id}
 
         def _admit() -> None:  # avecheck: ignore[lock] -- runs as on_pass under _pump_until's cv
             # window check and pending insertion are one atomic step under
@@ -1105,19 +1205,30 @@ class PipelinedHostRuntime(HostRuntime):
             # (send time, queue depth) snapshot feeds the window controller
             self._pending[rid] = fut
             self._track[rid] = (time.monotonic(), len(self._pending))
+            if trace is not None:
+                self._traces[rid] = trace
         self._pump_until(lambda: len(self._pending) < self._window.window,
                          on_pass=_admit)
         try:
+            t_ser = time.perf_counter()
             req = pack_message(meta, tree, codec=codec, request_id=rid)
+            if trace is not None:
+                trace.add("serialize", time.perf_counter() - t_ser)
             deadline = time.monotonic() + self.timeout
+            t_send = time.perf_counter()
             with self._slock:
                 self._send_frame_pumping(req, deadline)
+            if trace is not None:
+                # includes backpressure stalls (pumped receives) — the
+                # honest cost of getting this frame onto the wire
+                trace.add("send", time.perf_counter() - t_send)
             with self._cv:
                 self.bytes_sent += len(req)
         except BaseException:
             with self._cv:
                 self._pending.pop(rid, None)
                 self._track.pop(rid, None)
+                self._traces.pop(rid, None)
                 self._cv.notify_all()   # a window slot just freed: re-wake
             raise                       # submitters parked on the predicate
         return fut
@@ -1318,6 +1429,7 @@ class PipelinedHostRuntime(HostRuntime):
         with self._cv:
             fut = self._pending.pop(rid, None)
             track = self._track.pop(rid, None)
+            trace = self._traces.pop(rid, None)
             # shared counters only mutate under the cv (readers of stats()
             # and concurrent dispatchers must never race a lost update)
             self.bytes_received += len(data)
@@ -1330,6 +1442,10 @@ class PipelinedHostRuntime(HostRuntime):
         except Exception as e:  # noqa: BLE001
             fut.set_exception(e)
             return
+        if trace is not None:
+            # safe without the future's result: the caller only reads the
+            # trace after the future resolves (the future is the fence)
+            trace.merge(rmeta.get("spans"))
         if (self.adaptive_window and track is not None
                 and rmeta.get("ok", False) and "compute_s" in rmeta):
             t0, depth = track
@@ -1355,6 +1471,7 @@ class PipelinedHostRuntime(HostRuntime):
             pending = list(self._pending.values())
             self._pending.clear()
             self._track.clear()
+            self._traces.clear()
             self._receiving = False
             self._cv.notify_all()
         for fut in pending:
@@ -1362,12 +1479,13 @@ class PipelinedHostRuntime(HostRuntime):
                 fut.set_exception(exc)
 
     # ------------------------------------------------------------------
-    def _rpc(self, meta: dict, tree=None, codec: str = "raw") -> tuple[dict, Any]:
-        return self.wait(self.submit(meta, tree, codec=codec))
+    def _rpc(self, meta: dict, tree=None, codec: str = "raw",
+             trace=None) -> tuple[dict, Any]:
+        return self.wait(self.submit(meta, tree, codec=codec, trace=trace))
 
     def run_async(self, fp: str, fn: str, args, batchable: bool = False, *,
                   tenant: str | None = None, qos: dict | None = None,
-                  call_id: str | None = None) -> Future:
+                  call_id: str | None = None, trace=None) -> Future:
         """Async ``run``: a Future resolving to (rmeta, output tree).
         Resolve it with :meth:`wait` (or ``.result()`` after another call on
         this runtime has pumped the channel).  One wire attempt — a
@@ -1377,7 +1495,7 @@ class PipelinedHostRuntime(HostRuntime):
         args_np = jax.tree_util.tree_map(np.asarray, args)
         inner = self.submit(
             self._run_meta(fp, fn, batchable, tenant, qos, call_id),
-            args_np, codec=self.codec)
+            args_np, codec=self.codec, trace=trace)
 
         def _record(f: Future) -> None:
             if f.exception() is None:
@@ -1387,13 +1505,14 @@ class PipelinedHostRuntime(HostRuntime):
 
     def run(self, fp: str, fn: str, args, batchable: bool = False, *,
             tenant: str | None = None, qos: dict | None = None,
-            call_id: str | None = None) -> Any:
+            call_id: str | None = None, trace=None) -> Any:
         attempt = 0
         while True:
             try:
                 return self.wait(self.run_async(
                     fp, fn, args, batchable=batchable,
-                    tenant=tenant, qos=qos, call_id=call_id))[1]
+                    tenant=tenant, qos=qos, call_id=call_id,
+                    trace=trace))[1]
             except TenantThrottled as e:
                 if attempt >= self.throttle_retries:
                     raise

@@ -21,6 +21,7 @@ from repro.core.cache import model_fingerprint
 from repro.core.executor import HostRuntime, RemoteError
 from repro.core.memory import detach_tree
 from repro.core.profiler import AvecProfiler
+from repro.obs import trace as _trace
 from repro.core.serialization import tree_wire_bytes
 
 
@@ -177,11 +178,15 @@ class AvecSession:
             self.ensure_model()
         sent0 = self.runtime.bytes_sent
         recv0 = self.runtime.bytes_received
+        # facade trace entry point: mint the request-scoped trace id here;
+        # the runtime carries it in frame meta and every hop stamps a span
+        trace = _trace.start_trace(fn=fn, call_id=call_id)
         t0 = time.perf_counter()
         out = self.runtime.run(self.fp, fn, args,
                                tenant=self.tenant, qos=self.qos,
-                               call_id=call_id)
+                               call_id=call_id, trace=trace)
         wall = time.perf_counter() - t0
+        _trace.finish_trace(trace, wall)
         compute = self.runtime.last_compute_s
         self.profiler.record_cycle(
             gpu_s=compute,

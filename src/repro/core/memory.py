@@ -51,10 +51,12 @@ whole consumer chain above it is already lease-correct.
 from __future__ import annotations
 
 import weakref
+from typing import Optional
 
 import numpy as np
 
 from repro.analysis import sanitize as _sanitize
+from repro.obs.config import global_config
 
 #: installed LeaseTracker hook (``repro.analysis.sanitize``) or None.
 #: Auto-installed when AVEC_SANITIZE=1; benches/tests may install their own
@@ -77,7 +79,9 @@ def get_lease_tracker():
 #: default slab sizing: 8 x 4 MiB per pool, allocated lazily — an idle
 #: channel costs nothing.  4 MiB fits the paper's own workload (an OpenPose
 #: frame is ~3.76 MB on the wire, Eq. 1) so the flagship use case pools
-#: instead of falling back oversize
+#: instead of falling back oversize.  These are the registered defaults of
+#: the ``pool_slab_bytes`` / ``pool_slabs`` knobs (repro.obs.config);
+#: AVEC_POOL_SLAB_BYTES / AVEC_POOL_SLABS override any constructor value.
 DEFAULT_SLAB_BYTES = 4 << 20
 DEFAULT_SLABS = 8
 
@@ -197,10 +201,11 @@ class BufferPool:
     allocated lazily up to ``slabs``; see the module docstring for the
     miss/fallback semantics and sizing guidance."""
 
-    def __init__(self, slab_bytes: int = DEFAULT_SLAB_BYTES,
-                 slabs: int = DEFAULT_SLABS, name: str = "pool") -> None:
-        self.slab_bytes = int(slab_bytes)
-        self.max_slabs = max(int(slabs), 1)
+    def __init__(self, slab_bytes: Optional[int] = None,
+                 slabs: Optional[int] = None, name: str = "pool") -> None:
+        cfg = global_config()
+        self.slab_bytes = int(cfg.resolve("pool_slab_bytes", slab_bytes))
+        self.max_slabs = max(int(cfg.resolve("pool_slabs", slabs)), 1)
         self.name = name
         self._lock = _sanitize.make_rlock(f"BufferPool[{name}]._lock")
         self._slabs: list[_Slab] = []   # guarded-by: _lock

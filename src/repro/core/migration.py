@@ -21,6 +21,7 @@ from repro.core.executor import HostRuntime, RemoteError
 from repro.core.interception import AvecSession
 from repro.core.scheduler import DeviceAwareScheduler
 from repro.core.virtualization import AcceleratorRegistry
+from repro.obs.config import global_config
 
 
 class HeartbeatMonitor:
@@ -37,18 +38,22 @@ class HeartbeatMonitor:
     into probe bursts."""
 
     def __init__(self, runtime: HostRuntime, name: str,
-                 registry: AcceleratorRegistry, *, interval_s: float = 0.05,
-                 misses: int = 3, timeout_s: float = 0.5,
+                 registry: AcceleratorRegistry, *,
+                 interval_s: Optional[float] = None,
+                 misses: Optional[int] = None,
+                 timeout_s: Optional[float] = None,
                  jitter: float = 0.2, seed: int = 0,
                  on_failure: Optional[Callable[[str], None]] = None,
                  on_recovery: Optional[Callable[[str], None]] = None) -> None:
         import random
+        cfg = global_config()
         self.runtime = runtime
         self.name = name
         self.registry = registry
-        self.interval_s = interval_s
-        self.misses = misses
-        self.timeout_s = timeout_s
+        self.interval_s = float(cfg.resolve("heartbeat_interval_s",
+                                            interval_s))
+        self.misses = int(cfg.resolve("heartbeat_misses", misses))
+        self.timeout_s = float(cfg.resolve("heartbeat_timeout_s", timeout_s))
         self.jitter = max(0.0, min(float(jitter), 0.95))
         self.on_failure = on_failure
         self.on_recovery = on_recovery

@@ -38,6 +38,8 @@ from typing import Callable, Optional
 from repro.analysis import sanitize as _sanitize
 from repro.core.memory import BufferLease, BufferPool, release_buffer
 from repro.core.serialization import Frame
+from repro.obs.config import global_config
+from repro.obs.trace import emit as _log
 
 
 class ChannelClosed(Exception):
@@ -501,7 +503,7 @@ class TCPServer:
     ``pool_stats()`` aggregates the live connections' pool counters."""
 
     def __init__(self, handler: Callable, host: str = "127.0.0.1",
-                 port: int = 0, join_timeout: float = 2.0, *,
+                 port: int = 0, join_timeout: Optional[float] = None, *,
                  recv_pool: bool = True,
                  pool_slab_bytes: Optional[int] = None,
                  pool_slabs: Optional[int] = None) -> None:
@@ -523,7 +525,8 @@ class TCPServer:
         self._sock.bind((host, port))
         self._sock.listen(16)
         self.port = self._sock.getsockname()[1]
-        self.join_timeout = join_timeout
+        self.join_timeout = float(global_config().resolve(
+            "server_join_timeout_s", join_timeout))
         self._stop = threading.Event()
         self._lock = _sanitize.make_lock("TCPServer._lock")
         self._threads: list[threading.Thread] = []  # guarded-by: _lock
@@ -612,8 +615,8 @@ class TCPServer:
         except ProtocolError as e:
             # garbled stream: no addressable response is possible — drop the
             # connection and say so, instead of stranding the peer's futures
-            print(f"[TCPServer] closing connection on protocol error: {e}",
-                  file=sys.stderr, flush=True)
+            _log("protocol_error", stream=sys.stderr,
+                 component="TCPServer", error=str(e))
         except (ChannelClosed, OSError):
             pass
         finally:

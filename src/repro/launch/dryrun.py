@@ -1,11 +1,17 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# jax locks the device count at backend init, so this MUST run before the
+# `import jax` below.  Append to any pre-existing XLA_FLAGS (a user's
+# --xla_dump_to etc. must survive) and defer to a caller who already pinned
+# the device count themselves.
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=512"
+                               ).strip()
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
-The two lines above MUST stay first: jax locks the device count at backend
-init, and the dry-run needs 512 placeholder host devices to build the
-production meshes.  (Smoke tests and benches import repro normally and see 1
-device — this flag is set nowhere else.)
+The XLA_FLAGS block above MUST stay first: the dry-run needs 512 placeholder
+host devices to build the production meshes.  (Smoke tests and benches import
+repro normally and see 1 device — this flag is set nowhere else.)
 
 Per cell this script:
   1. builds abstract params / optimizer state / inputs (ShapeDtypeStruct —

@@ -29,6 +29,9 @@ from repro.core.executor import DestinationExecutor
 from repro.core.library import make_model_library
 from repro.core.transport import TCPServer
 from repro.models import model as M
+from repro.obs import metrics as obs_metrics
+from repro.obs.config import global_config
+from repro.obs.trace import emit
 from repro.serving.engine import Request, ServingEngine
 
 
@@ -78,6 +81,10 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--max-in-flight", type=int, default=8,
                     help="host role: in-flight window cap (adaptive below)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="destination role: serve Prometheus text on "
+                         "http://127.0.0.1:PORT/metrics (default: the "
+                         "metrics_port knob / AVEC_METRICS_PORT; 0 = off)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -98,10 +105,21 @@ def main() -> None:
                                  tenant_max_inflight=args.tenant_max_inflight,
                                  tenant_max_bytes=args.tenant_max_bytes)
         server = TCPServer(ex.handle, port=args.port).start()
-        print(f"destination executor for {args.arch} on port {server.port} "
-              f"(coalesce={args.coalesce}, tenant_weights={weights}, "
-              f"tenant caps inflight={args.tenant_max_inflight}/"
-              f"bytes={args.tenant_max_bytes:.0f}; ctrl-c to stop)")
+        # the recv-pool lives on the server, not the executor — bind it into
+        # the executor's registry so one scrape covers the whole destination
+        obs_metrics.bind_server(ex.metrics, server)
+        metrics_port = int(global_config().resolve("metrics_port",
+                                                   args.metrics_port))
+        msrv = None
+        if metrics_port > 0:
+            msrv = obs_metrics.MetricsServer(ex.metrics,
+                                             port=metrics_port).start()
+            emit("metrics_listening", port=msrv.port,
+                 url=f"http://127.0.0.1:{msrv.port}/metrics")
+        emit("destination_listening", arch=args.arch, port=server.port,
+             coalesce=args.coalesce, tenant_weights=weights,
+             tenant_max_inflight=args.tenant_max_inflight,
+             tenant_max_bytes=args.tenant_max_bytes)
         try:
             while True:
                 time.sleep(1)
@@ -112,13 +130,12 @@ def main() -> None:
                 # "draining" so schedulers stop routing here), bleed every
                 # QoS queue, THEN tear the server down — in-flight requests
                 # finish and their responses go out before the socket dies
-                print(f"draining {ex.name}: admission closed, "
-                      f"bleeding {ex.pending_work()} in-flight "
-                      f"request(s)...")
+                emit("drain_begin", name=ex.name, pending=ex.pending_work())
                 res = ex.drain(timeout_s=args.drain_timeout)
-                print(f"drain {'complete' if res['drained'] else 'TIMED OUT'}"
-                      f" (pending={res['pending']}, "
-                      f"replay hits served={ex.replay_hits})")
+                emit("drain_end", name=ex.name, drained=res["drained"],
+                     pending=res["pending"], replay_hits=ex.replay_hits)
+            if msrv is not None:
+                msrv.stop()
             server.stop()
             ex.shutdown()
         return
@@ -130,11 +147,11 @@ def main() -> None:
                           max_in_flight=args.max_in_flight) as client:
             for name in client.destinations:
                 caps = client.capabilities(name)
-                print(f"[handshake] {name}: protocol "
-                      f"v{caps.protocol_version}, "
-                      f"runtime {type(client.runtime(name)).__name__}, "
-                      f"codec {client.codec_for(name)}, "
-                      f"coalesce={caps.coalesce}")
+                emit("handshake", destination=name,
+                     protocol_version=caps.protocol_version,
+                     runtime=type(client.runtime(name)).__name__,
+                     codec=client.codec_for(name), coalesce=caps.coalesce,
+                     config=caps.config)
             sess = client.session(
                 cfg, params, "lm", tenant=args.tenant,
                 qos=avec.QoS(weight=args.qos_weight,
@@ -147,29 +164,29 @@ def main() -> None:
             t0 = time.perf_counter()
             sess.map("score", prompts)
             dt = time.perf_counter() - t0
-            print(f"{args.requests} offloaded score() calls in {dt:.2f}s "
-                  f"({args.requests / dt:.1f} req/s) over "
-                  f"{sess.last_map_stats['assigned']}")
+            emit("offload_complete", requests=args.requests, seconds=dt,
+                 req_per_s=args.requests / dt,
+                 assigned=sess.last_map_stats["assigned"])
             for name, s in client.stats().items():
                 if "window" not in s:
                     continue
-                print(f"[{name}] adaptive window "
-                      f"{s['window']}/{s['max_in_flight']} "
-                      f"(wire~{s['wire_ema_s'] * 1e3:.1f}ms "
-                      f"compute~{s['compute_ema_s'] * 1e3:.1f}ms), "
-                      f"send stalls {s['send_stalls']}, "
-                      f"resumed sends {s['sends_resumed']}, "
-                      f"recv retries {s['recv_retries']}, "
-                      f"{s['bytes_sent'] / 1e6:.1f}MB out / "
-                      f"{s['bytes_received'] / 1e6:.1f}MB in")
+                emit("runtime_stats", destination=name, window=s["window"],
+                     max_in_flight=s["max_in_flight"],
+                     wire_ema_ms=s["wire_ema_s"] * 1e3,
+                     compute_ema_ms=s["compute_ema_s"] * 1e3,
+                     send_stalls=s["send_stalls"],
+                     sends_resumed=s["sends_resumed"],
+                     recv_retries=s["recv_retries"],
+                     bytes_sent=s["bytes_sent"],
+                     bytes_received=s["bytes_received"])
             for name in client.destinations:
                 ts = client.refresh_capabilities(name).tenant_stats
                 for tenant, row in sorted(ts.items()):
-                    print(f"[{name}] tenant {tenant}: "
-                          f"share={row.get('drain_share', 0.0):.2f} "
-                          f"served={row.get('served', 0)} "
-                          f"throttled={row.get('throttled', 0)} "
-                          f"queue={row.get('queue_depth', 0)}")
+                    emit("tenant_stats", destination=name, tenant=tenant,
+                         drain_share=row.get("drain_share", 0.0),
+                         served=row.get("served", 0),
+                         throttled=row.get("throttled", 0),
+                         queue_depth=row.get("queue_depth", 0))
         return
 
     eng = ServingEngine(cfg, params, max_batch=args.max_batch,
@@ -184,8 +201,8 @@ def main() -> None:
     out = eng.run()
     dt = time.perf_counter() - t0
     toks = sum(len(v) for v in out.values())
-    print(f"{args.requests} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks / dt:.1f} tok/s, {eng.steps} engine ticks)")
+    emit("engine_complete", requests=args.requests, tokens=toks, seconds=dt,
+         tok_per_s=toks / dt, engine_ticks=eng.steps)
 
 
 if __name__ == "__main__":

@@ -36,6 +36,7 @@ from repro.core.executor import (DestinationDraining, TenantThrottled,
                                  _throttle_backoff)
 from repro.core.memory import detach_tree
 from repro.models import model as M
+from repro.obs import metrics as _obs_metrics
 
 
 @dataclass
@@ -281,6 +282,18 @@ class PipelinedOffloadFrontend:
         rt_stats = (self.runtime.stats()
                     if hasattr(self.runtime, "stats") else {})
         return {"submitted": self.submitted, **rt_stats}
+
+    def bind_metrics(self, reg: "_obs_metrics.MetricsRegistry",
+                     **labels) -> None:
+        """Expose this frontend on ``reg`` as scrape-time metric views:
+        ``avec_frontend_submitted_total`` plus the underlying runtime's
+        window/stall/byte gauges (when the runtime has a ``stats()``
+        surface).  Reads happen at scrape, not on the submit path."""
+        reg.counter("avec_frontend_submitted_total",
+                    "Requests submitted through an offload frontend.").bind(
+            lambda: float(self.submitted), op=self.fn, **labels)
+        if hasattr(self.runtime, "stats"):
+            _obs_metrics.bind_runtime(reg, self.runtime, **labels)
 
     def close(self) -> None:
         with self._lock:

@@ -1,4 +1,5 @@
 """Launch entrypoints + hierarchical compressed collectives."""
+import json
 import subprocess
 import sys
 import os
@@ -28,7 +29,11 @@ def test_serve_entrypoint_cli():
          "--requests", "2", "--max-len", "48"],
         capture_output=True, text=True, timeout=600, env=env)
     assert out.returncode == 0, out.stderr[-1500:]
-    assert "tok/s" in out.stdout
+    # entrypoints log structured JSON (repro.obs.trace.emit), one per line
+    events = [json.loads(line) for line in out.stdout.splitlines()
+              if line.startswith("{")]
+    done = [e for e in events if e["event"] == "engine_complete"]
+    assert done and done[0]["tokens"] > 0 and done[0]["tok_per_s"] > 0
 
 
 def test_dcn_wire_accounting():
