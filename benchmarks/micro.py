@@ -669,6 +669,75 @@ def drain_rehome_probe(n_steady: int = 200, n_drain: int = 200,
     }
 
 
+def intra_op_scaling_probe(rows: int = 4096, per_row_sleep_s: float = 2e-5,
+                           reps: int = 3,
+                           tolerance_4_vs_2: float = 1.1) -> dict:
+    """Intra-call sharding scaling probe (the CI intra-op gate).
+
+    ONE ``rows``-row elementwise-MLP batch offloaded through the facade
+    with ``shard=True`` over 1 vs 2 vs 4 in-process destinations.  The
+    modeled compute is a strictly row-proportional sleep (releases the
+    GIL, so in-process destinations genuinely overlap) plus strictly
+    row-wise elementwise math — deliberately NOT a BLAS matmul, whose
+    M-dimension blocking could legally round differently per split and
+    break the bit-identity acceptance this probe also checks.
+
+    Acceptance: 2-destination speedup >= 1.3x over 1, the 4-destination
+    wall within ``tolerance_4_vs_2`` of the 2-destination wall (ideally
+    faster), and the stitched outputs bit-identical to the unsharded
+    reference."""
+    from repro import avec
+    from repro.core.executor import DestinationExecutor
+
+    params = {"w1": np.float32(1.5), "b1": np.float32(-3.0),
+              "w2": np.float32(0.5)}
+
+    def work(p, state, args):
+        x = np.asarray(args["x"])
+        time.sleep(x.shape[0] * per_row_sleep_s)
+        return {"y": np.maximum(x * p["w1"] + p["b1"], 0.0) * p["w2"]}
+
+    x = {"x": np.arange(rows * 4, dtype=np.float32).reshape(rows, 4)}
+    executors = [DestinationExecutor({"mlp": {"work": work}}, name=f"d{i}")
+                 for i in range(4)]
+    walls: dict = {}
+    outs: dict = {}
+    shards: dict = {}
+    try:
+        for n in (1, 2, 4):
+            with avec.connect(executors[:n]) as client:
+                sess = client.session({"arch": "intra-op-probe"}, params,
+                                      "mlp", destination="d0")
+                sess.call("work", x, shard=True)    # warm models/frontends
+                best, out = float("inf"), None
+                for _ in range(reps):
+                    t0 = time.perf_counter()
+                    out = sess.call("work", x, shard=True)
+                    best = min(best, time.perf_counter() - t0)
+                walls[n] = best
+                outs[n] = np.asarray(out["y"]).copy()
+                if sess.last_shard_stats is not None:
+                    shards[n] = sess.last_shard_stats["shards"]
+    finally:
+        for ex in executors:
+            ex.shutdown()
+    return {
+        "rows": rows,
+        "per_row_sleep_s": per_row_sleep_s,
+        "wall_1_s": walls[1],
+        "wall_2_s": walls[2],
+        "wall_4_s": walls[4],
+        "speedup_2": walls[1] / walls[2],
+        "speedup_4": walls[1] / walls[4],
+        "tolerance_4_vs_2": tolerance_4_vs_2,
+        "four_within_tolerance": walls[4] <= walls[2] * tolerance_4_vs_2,
+        "bit_identical": bool(np.array_equal(outs[1], outs[2])
+                              and np.array_equal(outs[1], outs[4])),
+        "shards_2": shards.get(2, []),
+        "shards_4": shards.get(4, []),
+    }
+
+
 def _coalesce_walls(clients: int = 8, reps: int = 4) -> tuple[float, float, dict]:
     """(uncoalesced_wall_s, coalesced_wall_s, stats) for N concurrent clients
     hitting one destination with batchable matmul requests."""
@@ -734,6 +803,7 @@ def dataplane_report(frames: int = 8, in_flight: int = 4) -> dict:
     fairness = tenant_fairness_probe()
     ring = recv_ring_probe()
     drain = drain_rehome_probe()
+    intra_op = intra_op_scaling_probe()
     return {
         "serialize_raw_512x512": {
             "payload_bytes": nb,
@@ -759,6 +829,7 @@ def dataplane_report(frames: int = 8, in_flight: int = 4) -> dict:
         "recv_ring_buffer": ring,
         "tenant_fairness_2way": fairness,
         "drain_rehome": drain,
+        "intra_op_scaling": intra_op,
         "coalesced_dispatch": {
             "clients": 8, "reps": 4,
             "uncoalesced_wall_s": t_plain,

@@ -142,6 +142,13 @@ def main() -> None:
                          f"(bound {dr['p99_ratio_bound']:.0f}x, "
                          f"dropped={dr['dropped']}, "
                          f"warm={dr['rehome'].get('warm')})"))
+            io = report["intra_op_scaling"]
+            rows.append(("dataplane/intra_op_speedup_2dest",
+                         io["speedup_2"],
+                         f"{io['rows']} rows: {io['wall_1_s'] * 1e3:.0f}ms "
+                         f"-> {io['wall_2_s'] * 1e3:.0f}ms "
+                         f"(4dest {io['wall_4_s'] * 1e3:.0f}ms, "
+                         f"bit_identical={io['bit_identical']})"))
         except Exception:  # noqa: BLE001
             traceback.print_exc()
             rows.append(("dataplane/ERROR", 0.0, "see traceback"))

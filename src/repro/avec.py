@@ -66,19 +66,22 @@ from repro.core.interception import (ArgSpec, AvecSession,
                                      InterceptionLibrary)
 from repro.core.migration import MigrationManager, SessionShadow
 from repro.core.scheduler import DeviceAwareScheduler, NoDestinationError
-from repro.core.serialization import PROTOCOL_VERSION, SUPPORTED_CODECS
+from repro.core.serialization import (PROTOCOL_VERSION, SUPPORTED_CODECS,
+                                      tree_wire_bytes)
 from repro.core.transport import (Channel, ChannelClosed, DirectChannel,
                                   TCPChannel)
 from repro.core.virtualization import (AcceleratorRegistry, AcceleratorSpec,
                                        CLOUD_RTX)
+from repro.obs import trace as _trace
 from repro.obs.config import global_config
 from repro.serving.engine import (PipelinedOffloadFrontend,
                                   ShardedOffloadFrontend)
+from repro.serving.shardplan import ShardPlan, ShardPlanner, ShardStitchError
 
 __all__ = [
     "connect", "AvecClient", "ClientSession", "ConnectPolicy", "Endpoint",
     "Capabilities", "HandshakeError", "ArgSpec", "PROTOCOL_VERSION",
-    "QoS", "TenantThrottled", "DestinationDraining",
+    "QoS", "TenantThrottled", "DestinationDraining", "ShardStitchError",
 ]
 
 
@@ -606,6 +609,7 @@ class ClientSession(AvecSession):
         self._call_n = itertools.count(1)
         self.rehomes = 0
         self.last_rehome: Optional[dict] = None
+        self.last_shard_stats: Optional[dict] = None
         # proactive failure domain: a warm standby replica group, fed by the
         # host shadow's snapshot cadence (no shadow -> nothing to replicate)
         pol = client.policy
@@ -619,11 +623,24 @@ class ClientSession(AvecSession):
                 prepare=self._prepare_standby)
 
     # ------------------------------------------------------------------
-    def call(self, fn: str, args: Any) -> Any:
+    def call(self, fn: str, args: Any, *,
+             shard: Optional[bool] = None) -> Any:
         """One profiled execution cycle, with transparent failover: if the
         destination died (confirmed by a failed ping), the session migrates
         to the next-best healthy destination — weights via send-once, state
         from the host-side shadow — and the call is retried once.
+
+        ``shard=True`` opts this call into INTRA-CALL sharding (``None``
+        defers to the ``shard_calls`` knob): the leading batch axis of the
+        argument tree is row-split across the healthiest dedup-capable
+        destinations, the sub-calls run concurrently, and the results are
+        stitched back in range order — the caller sees exactly the tree an
+        unsharded call returns (bit-identical for row-aligned functions; a
+        function emitting aggregate leaves raises :class:`ShardStitchError`).
+        Only stateless functions belong here — the sharded path performs no
+        shadow snapshot.  When the pool can't shard the call (fewer than two
+        eligible destinations, or too few rows for the per-shard floor), it
+        silently falls through to the normal single-destination path.
 
         A :class:`TenantThrottled` that survives the runtime's jittered
         retries is NOT failover (the node is alive — it is saying no to
@@ -641,6 +658,12 @@ class ClientSession(AvecSession):
         not the request) serves the cached result instead of re-executing —
         at-least-once delivery with replay dedup, no client-observed
         duplicates."""
+        if shard is None:
+            shard = bool(global_config().get("shard_calls"))
+        if shard:
+            planned = self._plan_shards(args)
+            if planned is not None:
+                return self._call_sharded(fn, args, *planned)
         cid = f"{self._call_ns}-{next(self._call_n)}"
         try:
             out = self._tracked_call(fn, args, cid)
@@ -684,6 +707,226 @@ class ClientSession(AvecSession):
             return super().call(fn, args, call_id=call_id)
         finally:
             reg.release(dest)
+
+    # -- intra-call sharding -------------------------------------------
+    def _plan_shards(self, args: Any) -> Optional[tuple]:
+        """Row-range plan + destination assignment for one sharded call,
+        or ``None`` when the call must run unsharded (fewer than two
+        eligible destinations, unsplittable tree, or too few rows).
+        Eligible destinations serve this library AND dedup replays —
+        per-shard failover re-sends every range under its original
+        call_id, so a shard landing on a non-dedup peer could
+        double-execute.  Shard weights are the inverse of the scheduler's
+        predicted-latency scores (cost model x live backpressure x this
+        tenant's saturation): a destination scored 2x slower gets ~half
+        the rows."""
+        scored = [(va, s) for va, s in self.client.scheduler
+                  .scored_candidates(self.workload, tenant=self.tenant)
+                  if self.client.serves(va.name, self.lib)
+                  and self.client.capabilities(va.name)
+                  .raw.get("replay_dedup")]
+        if len(scored) < 2:
+            return None
+        planner = ShardPlanner()
+        scored = scored[:max(planner.max_shards, 1)]
+        weights = [1.0 / max(s, 1e-9) for _, s in scored]
+        plan = planner.plan_tree(args, weights)
+        if plan is None:
+            return None
+        names = [va.name for va, _ in scored][:plan.n_shards]
+        return plan, names
+
+    def _shard_frontend(self, cache: dict, fn: str,
+                        nm: str) -> PipelinedOffloadFrontend:
+        """Per-destination frontend for sharded sub-calls, model ensured
+        (send-once: a fingerprint hit when the destination holds it)."""
+        fe = cache.get(nm)
+        if fe is not None:
+            return fe
+        sib = self if nm == self.destination else \
+            self.client._sibling(self, nm)
+        sib.ensure_model()
+        fe = PipelinedOffloadFrontend(
+            sib.runtime, sib.fp, fn, tenant=self.tenant, qos=self.qos,
+            detach_results=self.detach_results)
+        cache[nm] = fe
+        return fe
+
+    def _shard_destination_alive(self, name: str) -> bool:
+        """Ping probe for one shard destination — same policy as
+        :meth:`_destination_alive`: an application error from a live node
+        is the call's problem, not grounds for failover."""
+        try:
+            rt = self.client._runtime_for(name)     # re-dials if broken
+        except Exception:  # noqa: BLE001 — re-dial failed: dead
+            return False
+        old_timeout = rt.timeout
+        rt.timeout = min(5.0, old_timeout)
+        try:
+            rt.ping()
+            return True
+        except Exception:  # noqa: BLE001 — any failure means dead
+            return False
+        finally:
+            rt.timeout = old_timeout
+
+    def _call_sharded(self, fn: str, args: Any, plan: ShardPlan,
+                      names: list) -> Any:
+        """Dispatch one planned call as concurrent row-range sub-calls
+        and stitch the results back in range order.
+
+        Per-range call ids derive from one parent id
+        (``<cid>/r<start>-<stop>``), and a failure triggers a RETRY ROUND
+        that re-sends EVERY range under its original id: ranges whose
+        destination survived answer from the replay LRU in one wire round
+        trip (no re-execution), and only the dead destination's ranges
+        actually re-execute on a survivor — at-least-once dispatch plus
+        dedup is exactly-once math.  A confirmed-dead destination is
+        quarantined (a draining one marked) exactly like whole-session
+        failover, and the re-homed ranges land in the migration ledger.
+
+        Tracing: each range gets a child record sharing the parent's
+        trace_id (fn suffixed with its row range); the parent absorbs the
+        slowest shard's timeline plus a measured ``stitch`` span (see
+        :func:`repro.obs.trace.merge_sharded`), so a sharded call still
+        sums to its wall like an unsharded one."""
+        cid = f"{self._call_ns}-{next(self._call_n)}"
+        parent = _trace.start_trace(fn=fn, call_id=cid)
+        t0 = time.perf_counter()
+        parts = plan.split(args)
+        n = plan.n_shards
+        rcids = [f"{cid}/r{r.start}-{r.stop}" for r in plan.ranges]
+        assign = list(names)                # range i -> destination name
+        frontends: dict[str, PipelinedOffloadFrontend] = {}
+        reg = self.client.registry
+        children: list = [None] * n
+        walls = [0.0] * n
+        computes = [0.0] * n
+        results: list = [None] * n
+        acquired = [False] * n
+        dead: set = set()
+        last_exc: Optional[BaseException] = None
+        retry_rounds = 0
+        ok = False
+        try:
+            for _round in range(len(names)):
+                alive = [nm for nm in names if nm not in dead]
+                if not alive:
+                    break
+                # re-home ranges off dead destinations (round > 0) onto the
+                # least-loaded survivors, and ledger the move
+                moved: dict[str, list] = {}
+                rr = itertools.cycle(alive)
+                for i in range(n):
+                    if assign[i] in dead:
+                        old_nm, assign[i] = assign[i], next(rr)
+                        moved.setdefault(old_nm, []).append(
+                            {"start": plan.ranges[i].start,
+                             "stop": plan.ranges[i].stop,
+                             "to": assign[i]})
+                for old_nm, rs in moved.items():
+                    self.client.migration.record_shard_failover(
+                        old_nm, rs, seconds=time.perf_counter() - t0)
+                # dispatch every range (survivors answer retries from the
+                # replay cache), then gather; a failed round marks deaths
+                # and goes again over whoever is left
+                failed = False
+                futs: list = [None] * n
+                for i in range(n):
+                    nm = assign[i]
+                    if parent is not None:
+                        r = plan.ranges[i]
+                        children[i] = _trace.TraceRecord(
+                            trace_id=parent.trace_id, call_id=rcids[i],
+                            fn=f"{fn}[{r.start}:{r.stop}]")
+                    try:
+                        fe = self._shard_frontend(frontends, fn, nm)
+                        reg.acquire(nm)
+                        acquired[i] = True
+                        futs[i] = (fe, fe.submit(
+                            parts[i], call_id=rcids[i], trace=children[i]),
+                            time.perf_counter())
+                    except DestinationDraining as e:
+                        self.client.registry.mark_draining(nm)
+                        dead.add(nm)
+                        last_exc, failed = e, True
+                    except self._FAILOVER_EXC as e:
+                        if self._shard_destination_alive(nm):
+                            raise       # live node: the call's own error
+                        self.client.registry.quarantine(
+                            nm, self.client.migration.quarantine_s)
+                        dead.add(nm)
+                        last_exc, failed = e, True
+                for i in range(n):
+                    if futs[i] is None:
+                        continue
+                    fe, fut, ts = futs[i]
+                    nm = assign[i]
+                    try:
+                        out = fe.gather(fut, parts[i], call_id=rcids[i],
+                                        trace=children[i])
+                    except TenantThrottled:
+                        try:    # saturation feedback, like unsharded call
+                            self.client.refresh_capabilities(nm)
+                        except Exception:  # noqa: BLE001 — best-effort
+                            pass
+                        raise
+                    except DestinationDraining as e:
+                        self.client.registry.mark_draining(nm)
+                        dead.add(nm)
+                        last_exc, failed = e, True
+                        continue
+                    except self._FAILOVER_EXC as e:
+                        if nm not in dead:
+                            if self._shard_destination_alive(nm):
+                                raise   # live node: application error
+                            self.client.registry.quarantine(
+                                nm, self.client.migration.quarantine_s)
+                            dead.add(nm)
+                        last_exc, failed = e, True
+                        continue
+                    finally:
+                        if acquired[i]:
+                            reg.release(nm)
+                            acquired[i] = False
+                    walls[i] = time.perf_counter() - ts
+                    computes[i] = getattr(fe.runtime, "last_compute_s",
+                                          0.0) or 0.0
+                    results[i] = out
+                if not failed:
+                    ok = True
+                    retry_rounds = _round
+                    break
+            if not ok:
+                raise last_exc or NoDestinationError(
+                    f"no destination survived sharded call {cid!r}")
+            ts0 = time.perf_counter()
+            out = plan.stitch(results)
+            stitch_s = time.perf_counter() - ts0
+            for i in range(n):
+                _trace.finish_trace(children[i], walls[i])
+            _trace.merge_sharded(parent, children)
+            if parent is not None:
+                parent.add("stitch", stitch_s)
+            wall = time.perf_counter() - t0
+            _trace.finish_trace(parent, wall)
+            compute = max(computes) if computes else 0.0
+            self.profiler.record_cycle(
+                gpu_s=compute, comm_s=max(wall - compute, 0.0),
+                bytes_sent=tree_wire_bytes(args),
+                bytes_received=tree_wire_bytes(out), fn=fn)
+            self.last_shard_stats = {
+                "call_id": cid, "fn": fn, "rows": plan.rows,
+                "shards": plan.describe(), "destinations": list(assign),
+                "failed": sorted(dead), "retry_rounds": retry_rounds,
+                "wall_s": wall}
+            return out
+        finally:
+            for i, nm in enumerate(assign):     # unwind an aborted round
+                if acquired[i]:
+                    reg.release(nm)
+            for fe in frontends.values():   # release sync fallback threads
+                fe.close()
 
     # -- proactive failure domain --------------------------------------
     def _pick_standby(self, primary: str) -> Optional[str]:
@@ -873,7 +1116,8 @@ class ClientSession(AvecSession):
     # ------------------------------------------------------------------
     def map(self, fn: str, requests: dict, *,
             batchable: Optional[bool] = None,
-            max_shards: Optional[int] = None) -> dict:
+            max_shards: Optional[int] = None,
+            shard: Optional[bool] = None) -> dict:
         """Fan ``{rid: args}`` out across the healthiest destinations (the
         ROADMAP's sharded-destinations step): requests round-robin over up
         to ``max_shards`` scheduler-ranked endpoints, each shard streaming
@@ -881,7 +1125,14 @@ class ClientSession(AvecSession):
         ensured once per destination.  Only stateless per-request functions
         belong here — stateful decode streams must stay on one session.
         ``batchable`` defaults to each peer's advertised coalescing
-        support."""
+        support.
+
+        ``shard=True`` (``None`` defers to the ``shard_calls`` knob)
+        additionally row-splits any single oversized request across the
+        fan-out destinations and stitches it back — intra-call sharding on
+        the map path.  A request whose leading axis is under the
+        ``shard_min_rows`` floor always passes through whole, never as
+        degenerate slivers."""
         limit = max_shards or self.client.policy.max_shards
         cands = [va for va in self.client.scheduler.candidates(
                      self.workload, tenant=self.tenant)
@@ -898,7 +1149,11 @@ class ClientSession(AvecSession):
                 sib.runtime, sib.fp, fn, batchable=b,
                 tenant=self.tenant, qos=self.qos,
                 detach_results=self.detach_results))
-        sharded = ShardedOffloadFrontend(frontends, names=names)
+        if shard is None:
+            shard = bool(global_config().get("shard_calls"))
+        sharded = ShardedOffloadFrontend(
+            frontends, names=names,
+            planner=ShardPlanner() if shard else None)
         # hold the registry's live-load counters for the round-robin
         # assignment (shard i serves every len(names)-th request) so
         # concurrent sessions' scheduling sees this fan-out as load

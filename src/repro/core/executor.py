@@ -743,6 +743,11 @@ class DestinationExecutor:
             # carrying the same call_id cannot double-execute
             "draining": self.draining,
             "replay_dedup": self.replay_cache > 0,
+            # intra-call sharding: a row-range sub-call is just a normal
+            # ``run`` with a range-keyed call_id, so any dedup-capable
+            # executor can serve one; advertised separately so facades can
+            # gate the feature explicitly
+            "intra_op_sharding": self.replay_cache > 0,
             # observability: the destination's effective knob values (env
             # overrides and constructor args already folded in), so a
             # client sees the remote end's actual tuning

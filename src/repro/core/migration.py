@@ -220,3 +220,16 @@ class MigrationManager:
                  "seconds": seconds, "warm": warm, "reason": reason}
         self.migrations.append(entry)
         return entry
+
+    def record_shard_failover(self, from_name: str, ranges: list, *,
+                              seconds: float) -> dict:
+        """Ledger entry for an intra-call shard failover: destination
+        ``from_name`` died (or drained) mid-sharded-call and only its row
+        ``ranges`` re-executed elsewhere — the surviving shards answered
+        the retry round from their replay caches.  Same ordered
+        ``migrations`` history as whole-session re-homes."""
+        entry = {"from": from_name, "to": None, "cached": False,
+                 "seconds": seconds, "warm": False,
+                 "reason": "shard-failover", "ranges": list(ranges)}
+        self.migrations.append(entry)
+        return entry

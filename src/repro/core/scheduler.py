@@ -206,8 +206,13 @@ class DeviceAwareScheduler:
                                                                     tenant)
         return s
 
-    def candidates(self, w: Workload, exclude: tuple[str, ...] = (),
-                   tenant: str | None = None) -> list[VirtualAccelerator]:
+    def scored_candidates(self, w: Workload, exclude: tuple[str, ...] = (),
+                          tenant: str | None = None
+                          ) -> list[tuple[VirtualAccelerator, float]]:
+        """Routable candidates WITH their predicted-latency scores, ranked
+        best first.  The intra-call :class:`~repro.serving.shardplan.
+        ShardPlanner` weights shard sizes by the inverse of these scores,
+        so a backpressured destination gets proportionally fewer rows."""
         # routable, not merely healthy: a destination that advertised
         # ``draining`` in its handshake (or sits in a post-failover
         # quarantine cool-down) must stop receiving NEW placements while
@@ -215,7 +220,13 @@ class DeviceAwareScheduler:
         pool = [va for va in self.registry.routable()
                 if va.name not in exclude
                 and va.spec.mem_bytes >= w.model_bytes]
-        return sorted(pool, key=lambda va: self.score(w, va, tenant))
+        scored = [(va, self.score(w, va, tenant)) for va in pool]
+        scored.sort(key=lambda pair: pair[1])
+        return scored
+
+    def candidates(self, w: Workload, exclude: tuple[str, ...] = (),
+                   tenant: str | None = None) -> list[VirtualAccelerator]:
+        return [va for va, _ in self.scored_candidates(w, exclude, tenant)]
 
     def pick(self, w: Workload, exclude: tuple[str, ...] = (),
              tenant: str | None = None) -> VirtualAccelerator:

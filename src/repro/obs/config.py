@@ -249,6 +249,18 @@ def _register_defaults(cfg: GlobalConfig) -> None:
     reg("shadow_every", int, 1,
         "Snapshot session state to the warm standby every N calls "
         "(ConnectPolicy.shadow_every).")
+    # -- intra-op sharding -------------------------------------------------
+    reg("shard_min_rows", int, 256,
+        "Minimum batch rows per shard for intra-call sharding; a run "
+        "whose leading axis is under twice this passes through unsharded "
+        "(no degenerate slivers — per-sub-call wire overhead is fixed).")
+    reg("shard_max_shards", int, 4,
+        "Maximum destinations one run is row-split across "
+        "(0 or 1 disables intra-call sharding).")
+    reg("shard_calls", bool, False,
+        "Default for ClientSession.call(shard=None): opt stateless "
+        "facade calls into intra-call sharding without per-call flags "
+        "(stateful decode streams must stay unsharded).")
     # -- cluster ----------------------------------------------------------
     reg("heartbeat_interval_s", float, 0.05,
         "HeartbeatMonitor ping cadence, seconds (jittered).")

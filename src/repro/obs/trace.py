@@ -32,13 +32,13 @@ import json
 import sys
 import time
 import uuid
-from typing import Any, Optional, TextIO
+from typing import Any, Optional, Sequence, TextIO
 
 from repro.analysis import sanitize as _sanitize
 from repro.obs.config import global_config
 
 SPAN_ORDER = ("serialize", "send", "queue", "coalesce", "execute",
-              "respond")
+              "stitch", "respond")
 
 
 def new_trace_id() -> str:
@@ -162,6 +162,31 @@ def finish_trace(trace: Optional[TraceRecord],
     if global_config().get("trace_log"):
         emit("trace", **trace.to_dict())
     return trace
+
+
+def merge_sharded(parent: Optional[TraceRecord],
+                  children: Sequence[Optional[TraceRecord]]
+                  ) -> Optional[TraceRecord]:
+    """Fold one sharded call's per-shard timelines into the parent record.
+
+    The shards ran CONCURRENTLY, so summing every shard's spans would
+    overshoot the parent's wall by ~n_shards x.  The parent instead
+    inherits the critical path — the slowest (finished) shard's full
+    timeline, whose spans sum to that shard's wall, which is bounded by
+    the parent's — so :meth:`TraceRecord.finish` still books a
+    non-negative remainder and the sharded call sums to its wall exactly
+    like an unsharded one.  The per-shard records carry the parent's
+    ``trace_id`` and land in the sink individually (via
+    :func:`finish_trace`), so the full fan-out is reconstructable."""
+    if parent is None:
+        return None
+    done = [c for c in children if c is not None and c.wall_s is not None]
+    if not done:
+        return parent
+    slowest = max(done, key=lambda c: c.wall_s)
+    for span in slowest.spans:
+        parent.add(span["name"], span["dur_s"])
+    return parent
 
 
 # ----------------------------------------------------------------------

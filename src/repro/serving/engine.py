@@ -37,6 +37,7 @@ from repro.core.executor import (DestinationDraining, TenantThrottled,
 from repro.core.memory import detach_tree
 from repro.models import model as M
 from repro.obs import metrics as _obs_metrics
+from repro.serving.shardplan import ShardPlanner
 
 
 @dataclass
@@ -216,9 +217,14 @@ class PipelinedOffloadFrontend:
         self.submitted = 0                              # guarded-by: _lock
         self._pool: Optional[ThreadPoolExecutor] = None  # guarded-by: _lock
 
-    def submit(self, args: Any) -> Future:
+    def submit(self, args: Any, *, call_id: Optional[str] = None,
+               trace: Any = None) -> Future:
         """Async submit; Future resolves to the output tree (waiting on it
         pumps the channel — the pipelined runtime has no reader thread).
+
+        ``call_id``/``trace`` ride through to the runtime so a sharded
+        sub-call keeps its range-keyed replay-dedup identity and stamps
+        its spans into the parent trace's child record.
 
         A synchronous runtime (no ``run_async``: a negotiated-down peer or
         a request-only channel) degrades to one worker thread per frontend:
@@ -230,21 +236,24 @@ class PipelinedOffloadFrontend:
         if hasattr(self.runtime, "run_async"):
             inner = self.runtime.run_async(self.fp, self.fn, args,
                                            batchable=self.batchable,
-                                           tenant=self.tenant, qos=self.qos)
+                                           tenant=self.tenant, qos=self.qos,
+                                           call_id=call_id, trace=trace)
             return self.runtime.chain(inner, self._materialize)
         with self._lock:    # lazy worker: don't double-create under racers
             if self._pool is None:
                 self._pool = ThreadPoolExecutor(max_workers=1)
             pool = self._pool
-        return pool.submit(self._run_sync, args)
+        return pool.submit(self._run_sync, args, call_id, trace)
 
     def _materialize(self, meta: dict, tree: Any) -> Any:
         return detach_tree(tree) if self.detach_results else tree
 
-    def _run_sync(self, args: Any) -> Any:
+    def _run_sync(self, args: Any, call_id: Optional[str] = None,
+                  trace: Any = None) -> Any:
         out = self.runtime.run(self.fp, self.fn, args,
                                batchable=self.batchable,
-                               tenant=self.tenant, qos=self.qos)
+                               tenant=self.tenant, qos=self.qos,
+                               call_id=call_id, trace=trace)
         return self._materialize({}, out)
 
     def map(self, requests: dict) -> dict:
@@ -256,12 +265,16 @@ class PipelinedOffloadFrontend:
         return {rid: self.gather(fut, requests[rid])
                 for rid, fut in futs.items()}
 
-    def gather(self, fut: Future, args: Any) -> Any:
+    def gather(self, fut: Future, args: Any, *,
+               call_id: Optional[str] = None, trace: Any = None) -> Any:
         """Resolve one :meth:`submit` future, re-submitting on
         ``TenantThrottled`` with jittered backoff.  Only the pipelined path
         retries here — the sync-runtime fallback already retried inside
         ``HostRuntime.run``, and stacking a second loop on top would square
-        the attempt count."""
+        the attempt count.  A retried submit keeps the original ``call_id``
+        (a throttled request was never admitted, so there is no replay
+        entry to collide with — and a shard retry MUST keep its id for
+        at-least-once dedup)."""
         retries = (getattr(self.runtime, "throttle_retries", 0)
                    if hasattr(self.runtime, "run_async") else 0)
         attempt = 0
@@ -273,7 +286,7 @@ class PipelinedOffloadFrontend:
                     raise
                 time.sleep(_throttle_backoff(attempt, e.retry_after_s))
                 attempt += 1
-                fut = self.submit(args)
+                fut = self.submit(args, call_id=call_id, trace=trace)
 
     def stats(self) -> dict:
         """Frontend + data-plane counters: the runtime's adaptive window,
@@ -317,18 +330,30 @@ class ShardedOffloadFrontend:
     :class:`~repro.core.executor.DestinationDraining` (zero-downtime exit)
     is retired from the rotation and the bounced request re-routes to a
     remaining shard — the fan-out completes with zero dropped requests as
-    long as one shard stays admitting."""
+    long as one shard stays admitting.
 
-    def __init__(self, frontends: list, names: Optional[list] = None) -> None:
+    With a :class:`~repro.serving.shardplan.ShardPlanner` attached,
+    :meth:`map` additionally row-splits any single oversized request
+    across the shards (intra-call sharding) and stitches its sub-results
+    back in range order.  A request whose leading axis does not clear the
+    planner's per-shard row floor passes through whole — never as
+    degenerate slivers — and unsplittable trees (rank-0 or row-misaligned
+    leaves) always pass through."""
+
+    def __init__(self, frontends: list, names: Optional[list] = None,
+                 planner: Optional["ShardPlanner"] = None) -> None:
         if not frontends:
             raise ValueError("sharded frontend needs at least one shard")
         self.frontends = list(frontends)
         self.names = list(names) if names is not None else [
             f"shard{i}" for i in range(len(frontends))]
+        self.planner = planner
         self._lock = _sanitize.make_lock("ShardedOffloadFrontend._lock")
         self.assigned = [0] * len(self.frontends)  # guarded-by: _lock
         self.drained: set = set()   # guarded-by: _lock (shards retired by a drain)
         self.rerouted = 0           # guarded-by: _lock (moved off a draining shard)
+        self.split_calls = 0        # guarded-by: _lock (requests row-split)
+        self.passthrough_calls = 0  # guarded-by: _lock (too small / unsplittable)
 
     def _active(self) -> list:  # callers hold _lock
         return [i for i in range(len(self.frontends))
@@ -367,30 +392,66 @@ class ShardedOffloadFrontend:
                     self.rerouted += 1
                 fut = self.frontends[i].submit(args)
 
+    def _plan(self, args: Any):
+        """Intra-call plan for one request, or ``None`` to pass it through
+        whole (no planner, too few rows for the per-shard floor, or an
+        unsplittable tree).  A 1-row-sliver "split" is never produced —
+        the planner's floor (``shard_min_rows``) sees to that."""
+        if self.planner is None:
+            return None
+        weights = [1.0] * max(len(self.frontends) - len(self.drained), 1)
+        plan = self.planner.plan_tree(args, weights)
+        with self._lock:
+            if plan is None:
+                self.passthrough_calls += 1
+            else:
+                self.split_calls += 1
+        return plan
+
     def map(self, requests: dict) -> dict:
         """Round-robin ``{rid: args}`` over the shards, gather all results.
         Submission interleaves shards so every destination's pipeline fills
         before any result is awaited.  TenantThrottled bounces retry on the
         shard that served them (each frontend's own jittered gather);
-        DestinationDraining bounces re-route to a remaining shard."""
+        DestinationDraining bounces re-route to a remaining shard.
+
+        When a planner is attached, an oversized request is row-split so
+        its ranges compute on different destinations concurrently, then
+        stitched back in range order — the caller still sees one result
+        per rid, bit-identical to the unsharded tree for row-aligned
+        functions."""
         rr = itertools.cycle(range(len(self.frontends)))
         futs = {}
         for rid, args in requests.items():
+            plan = self._plan(args)
+            if plan is not None:
+                subs = []
+                for part in plan.split(args):
+                    i = self._route()   # least-loaded: ranges spread out
+                    subs.append((i, self.frontends[i].submit(part), part))
+                futs[rid] = (plan, subs)
+                continue
             with self._lock:
                 i = next(rr)
                 while i in self.drained \
                         and len(self.drained) < len(self.frontends):
                     i = next(rr)    # skip shards already known draining
                 self.assigned[i] += 1
-            futs[rid] = (i, self.frontends[i].submit(args))
-        return {rid: self._gather_one(i, fut, requests[rid])
-                for rid, (i, fut) in futs.items()}
+            futs[rid] = (None, [(i, self.frontends[i].submit(args), args)])
+        out = {}
+        for rid, (plan, subs) in futs.items():
+            parts = [self._gather_one(i, fut, part)
+                     for (i, fut, part) in subs]
+            out[rid] = parts[0] if plan is None else plan.stitch(parts)
+        return out
 
     def stats(self) -> dict:
         """Per-shard frontend/data-plane counters keyed by shard name."""
         return {"assigned": dict(zip(self.names, self.assigned)),
                 "drained": sorted(self.names[i] for i in self.drained),
                 "rerouted": self.rerouted,
+                "split_calls": self.split_calls,
+                "passthrough_calls": self.passthrough_calls,
                 "shards": {n: fe.stats()
                            for n, fe in zip(self.names, self.frontends)}}
 

@@ -734,3 +734,96 @@ def test_chaos_blackhole_failover_reexecutes_only_unacked_call(lm):
     finally:
         for s in servers.values():
             s.stop()
+
+
+# ---------------------------------------------------------------------------
+# per-shard failover chaos (intra-call sharding)
+# ---------------------------------------------------------------------------
+
+class _MortalExecutor(DestinationExecutor):
+    """In-process executor that can 'die': once ``dead`` is set, every
+    frame — including the facade's liveness probe — raises
+    :class:`ChannelClosed`, so a DirectChannel peer looks exactly like a
+    crashed node."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.dead = False
+
+    def handle(self, raw):
+        if self.dead:
+            raise ChannelClosed(f"{self.name} crashed")
+        return super().handle(raw)
+
+
+def test_chaos_shard_failover_reexecutes_only_lost_range():
+    """Kill one destination mid-sharded-call (seed-picked victim): the
+    retry round re-sends EVERY range under its original call_id, the
+    surviving destinations answer their ranges from the replay LRU
+    (dedup hit, no re-execution), and only the victim's row range
+    re-executes — on exactly one survivor.  The stitched result is
+    bit-identical to the unsharded math."""
+    names = [f"d{i}" for i in range(3)]
+    victim = names[CHAOS_SEED % len(names)]
+    executed = []           # (executor, first-row value, rows) per work call
+    state = {"armed": False, "failed": False}
+    executors = {}
+
+    def make_work(name):
+        def work(params, state_, args):
+            x = np.asarray(args["x"])
+            executed.append((name, float(x[0, 0]), int(x.shape[0])))
+            if name == victim and state["armed"] and not state["failed"]:
+                state["failed"] = True
+                executors[victim].dead = True       # die mid-execution
+                raise RuntimeError("injected shard death")
+            return {"y": x * 2.0 + 1.0}
+        return work
+
+    for n in names:
+        executors[n] = _MortalExecutor({"tiny": {"work": make_work(n)}},
+                                       name=n)
+    rows = 768                                      # 3 shards at the floor
+    x = {"x": np.arange(rows * 2, dtype=np.float32).reshape(rows, 2)}
+    expect = x["x"] * 2.0 + 1.0
+    with avec.connect(list(executors.values())) as client:
+        sess = client.session({"a": 1}, {"w": np.zeros(1, np.float32)},
+                              "tiny", destination="d0")
+        state["armed"] = True
+        out = sess.call("work", x, shard=True)
+        assert np.array_equal(np.asarray(out["y"]), expect)
+
+        st = sess.last_shard_stats
+        assert st["failed"] == [victim]
+        assert st["retry_rounds"] == 1
+        ranges = {(float(s["start"] * 2), s["stop"] - s["start"]): s
+                  for s in st["shards"]}
+        # every work execution maps onto a planned range
+        assert all((v0, r) in ranges for (_, v0, r) in executed)
+        by_range = {}
+        for name, v0, r in executed:
+            by_range.setdefault((v0, r), []).append(name)
+        victim_range = [k for k, v in by_range.items() if victim in v]
+        assert len(victim_range) == 1               # victim owned one range
+        runs = by_range[victim_range[0]]
+        # the lost range ran twice: the aborted attempt on the victim plus
+        # the re-execution on exactly one survivor
+        assert runs[0] == victim and len(runs) == 2 and runs[1] != victim
+        # every OTHER range executed exactly once — the retry round's
+        # re-sends were answered from the survivors' replay caches
+        for k, v in by_range.items():
+            if k != victim_range[0]:
+                assert len(v) == 1
+        survivors = [n for n in names if n != victim]
+        assert all(executors[n].replay_hits >= 1 for n in survivors)
+        assert executors[victim].replay_hits == 0
+        # the death is ledgered as a shard failover with the lost range
+        entry = client.migration.migrations[-1]
+        assert entry["reason"] == "shard-failover"
+        assert entry["from"] == victim
+        assert entry["ranges"][0]["to"] in survivors
+        # and the victim is quarantined out of routing
+        va = client.registry.get(victim)
+        assert not va.healthy and va.quarantined
+    for ex in executors.values():
+        ex.shutdown()

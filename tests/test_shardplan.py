@@ -1,0 +1,269 @@
+"""Intra-call sharding: the ShardPlanner's split/stitch algebra, the
+engine-level map splitting (with the min-rows passthrough), the facade's
+sharded call path (bit-identical stitched results across in-process
+destinations), and the sharded-trace contract (per-shard spans merge into
+the parent so a sharded call still sums to its wall)."""
+import time
+
+import numpy as np
+import pytest
+
+from repro import avec
+from repro.core.executor import DestinationExecutor, HostRuntime
+from repro.core.transport import DirectChannel
+from repro.obs import trace as trace_mod
+from repro.serving.engine import (PipelinedOffloadFrontend,
+                                  ShardedOffloadFrontend)
+from repro.serving.shardplan import (RowRange, ShardPlan, ShardPlanner,
+                                     ShardStitchError, leading_rows)
+
+
+# ---------------------------------------------------------------------------
+# leading_rows: the splittability predicate
+# ---------------------------------------------------------------------------
+
+def test_leading_rows_aligned_tree():
+    tree = {"x": np.zeros((8, 4)), "m": np.zeros((8,), np.int32)}
+    assert leading_rows(tree) == 8
+
+
+def test_leading_rows_rejects_rank0_and_misaligned():
+    assert leading_rows({"x": np.zeros((8, 4)), "s": np.float32(1.0)}) is None
+    assert leading_rows({"x": np.zeros((8, 4)), "y": np.zeros((4, 4))}) is None
+    assert leading_rows({}) is None
+
+
+# ---------------------------------------------------------------------------
+# ShardPlanner: split sizing
+# ---------------------------------------------------------------------------
+
+def test_plan_even_split_covers_rows_contiguously():
+    plan = ShardPlanner(min_rows=256, max_shards=4).plan(4096)
+    assert plan.n_shards == 4
+    assert plan.ranges[0].start == 0 and plan.ranges[-1].stop == 4096
+    for a, b in zip(plan.ranges, plan.ranges[1:]):
+        assert a.stop == b.start            # contiguous, ordered
+    assert all(r.rows >= 256 for r in plan.ranges)
+    assert sum(r.rows for r in plan.ranges) == 4096
+
+
+def test_plan_below_twice_min_rows_passes_through():
+    planner = ShardPlanner(min_rows=256, max_shards=4)
+    assert not planner.should_split(511)
+    assert planner.plan(511).n_shards == 1
+    # plan_tree's contract: None means "run unsharded", not a 1-shard plan
+    assert planner.plan_tree({"x": np.zeros((511, 2))}) is None
+
+
+def test_plan_weights_skew_rows_toward_fast_destinations():
+    plan = ShardPlanner(min_rows=4, max_shards=2).plan(300, weights=[3.0, 1.0])
+    assert plan.n_shards == 2
+    assert plan.ranges[0].rows > plan.ranges[1].rows
+    assert plan.ranges[0].rows == pytest.approx(225, abs=2)
+
+
+def test_plan_extreme_skew_still_respects_row_floor():
+    # a near-zero weight must not produce a sliver below min_rows: either
+    # the floor is enforced or the planner drops to fewer shards
+    plan = ShardPlanner(min_rows=100, max_shards=4).plan(
+        400, weights=[1.0, 1e-9, 1e-9, 1e-9])
+    assert all(r.rows >= 100 for r in plan.ranges)
+    assert sum(r.rows for r in plan.ranges) == 400
+
+
+def test_plan_max_shards_zero_or_one_disables():
+    for cap in (0, 1):
+        planner = ShardPlanner(min_rows=4, max_shards=cap)
+        assert planner.plan(4096).n_shards == 1
+        assert planner.plan_tree({"x": np.zeros((4096, 2))}) is None
+
+
+def test_plan_weight_list_caps_shard_count():
+    plan = ShardPlanner(min_rows=4, max_shards=4).plan(400, weights=[1.0, 1.0])
+    assert plan.n_shards == 2               # only two destinations offered
+
+
+# ---------------------------------------------------------------------------
+# ShardPlan: split/stitch is the identity for row-aligned trees
+# ---------------------------------------------------------------------------
+
+def test_split_stitch_roundtrip_bit_identical():
+    x = {"a": np.arange(40.0).reshape(10, 4), "b": np.arange(10)}
+    plan = ShardPlanner(min_rows=2, max_shards=3).plan_tree(x)
+    parts = plan.split(x)
+    assert [leading_rows(p) for p in parts] == [r.rows for r in plan.ranges]
+    out = plan.stitch(parts)
+    assert np.array_equal(out["a"], x["a"]) and np.array_equal(out["b"], x["b"])
+
+
+def test_stitch_rejects_aggregate_outputs():
+    plan = ShardPlan(8, [RowRange(0, 0, 4), RowRange(1, 4, 8)])
+    with pytest.raises(ShardStitchError):
+        plan.stitch([{"loss": np.zeros(())}, {"loss": np.zeros(())}])
+    with pytest.raises(ShardStitchError):        # row-count mismatch
+        plan.stitch([{"y": np.zeros((4, 2))}, {"y": np.zeros((3, 2))}])
+    with pytest.raises(ShardStitchError):        # wrong part count
+        plan.stitch([{"y": np.zeros((4, 2))}])
+
+
+# ---------------------------------------------------------------------------
+# engine: ShardedOffloadFrontend.map row-splits oversized requests
+# ---------------------------------------------------------------------------
+
+def _double(params, state, args):
+    return {"y": np.asarray(args["x"]) * 2.0}
+
+
+def _frontend(ex, fp="fp"):
+    rt = HostRuntime(DirectChannel(ex))
+    rt.put_model(fp, "tiny", {"w": np.zeros(1, np.float32)})
+    return PipelinedOffloadFrontend(rt, fp, "work")
+
+
+def test_sharded_map_splits_large_and_passes_small_through():
+    exs = [DestinationExecutor({"tiny": {"work": _double}}, name=f"d{i}")
+           for i in range(2)]
+    try:
+        fe = ShardedOffloadFrontend(
+            [_frontend(ex) for ex in exs],
+            planner=ShardPlanner(min_rows=4, max_shards=2))
+        big = {"x": np.arange(32.0).reshape(16, 2)}
+        small = {"x": np.arange(6.0).reshape(3, 2)}     # < min_rows: whole
+        out = fe.map({"big": big, "small": small})
+        assert np.array_equal(out["big"]["y"], big["x"] * 2.0)
+        assert np.array_equal(out["small"]["y"], small["x"] * 2.0)
+        st = fe.stats()
+        assert st["split_calls"] == 1 and st["passthrough_calls"] == 1
+        # the split really landed on both destinations
+        assert all(v > 0 for v in st["assigned"].values())
+    finally:
+        for ex in exs:
+            ex.shutdown()
+
+
+def test_sharded_map_without_planner_is_unchanged():
+    exs = [DestinationExecutor({"tiny": {"work": _double}}, name=f"d{i}")
+           for i in range(2)]
+    try:
+        fe = ShardedOffloadFrontend([_frontend(ex) for ex in exs])
+        big = {"x": np.arange(32.0).reshape(16, 2)}
+        out = fe.map({"r": big})
+        assert np.array_equal(out["r"]["y"], big["x"] * 2.0)
+        assert fe.stats()["split_calls"] == 0
+    finally:
+        for ex in exs:
+            ex.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# facade: ClientSession.call(shard=True)
+# ---------------------------------------------------------------------------
+
+def _mlp_pool(n, record=None, per_row_sleep_s=0.0):
+    def work(params, state, args):
+        x = np.asarray(args["x"])
+        if record is not None:
+            record.append(int(x.shape[0]))
+        if per_row_sleep_s:
+            time.sleep(x.shape[0] * per_row_sleep_s)
+        return {"y": np.maximum(x * params["w1"] + params["b1"], 0.0)
+                     * params["w2"]}
+    return [DestinationExecutor({"tiny": {"work": work}}, name=f"d{i}")
+            for i in range(n)]
+
+
+_PARAMS = {"w1": np.float32(1.5), "b1": np.float32(-3.0),
+           "w2": np.float32(0.5)}
+
+
+def test_facade_sharded_call_bit_identical_and_spread():
+    rows = []
+    exs = _mlp_pool(3, record=rows)
+    x = {"x": np.arange(1024.0 * 4, dtype=np.float32).reshape(1024, 4)}
+    with avec.connect(exs) as client:
+        sess = client.session({"a": 1}, _PARAMS, "tiny", destination="d0")
+        ref = sess.call("work", x)
+        rows.clear()
+        out = sess.call("work", x, shard=True)
+        assert np.array_equal(np.asarray(ref["y"]), np.asarray(out["y"]))
+        st = sess.last_shard_stats
+        assert st is not None and len(st["shards"]) >= 2
+        assert st["failed"] == [] and st["retry_rounds"] == 0
+        # the work really split: no executor saw the whole batch, and the
+        # sub-calls cover it exactly
+        assert all(r < 1024 for r in rows) and sum(rows) == 1024
+    for ex in exs:
+        ex.shutdown()
+
+
+def test_facade_sharded_call_small_batch_falls_through():
+    rows = []
+    exs = _mlp_pool(2, record=rows)
+    x = {"x": np.arange(16.0, dtype=np.float32).reshape(8, 2)}
+    with avec.connect(exs) as client:
+        sess = client.session({"a": 1}, _PARAMS, "tiny", destination="d0")
+        out = sess.call("work", x, shard=True)      # under the row floor
+        assert rows == [8]                          # one whole-batch call
+        assert np.asarray(out["y"]).shape == (8, 2)
+        assert sess.last_shard_stats is None        # never planned
+    for ex in exs:
+        ex.shutdown()
+
+
+def test_facade_sharded_call_single_destination_falls_through():
+    exs = _mlp_pool(1)
+    x = {"x": np.zeros((2048, 2), np.float32)}
+    with avec.connect(exs) as client:
+        sess = client.session({"a": 1}, _PARAMS, "tiny", destination="d0")
+        out = sess.call("work", x, shard=True)      # nobody to shard with
+        assert np.asarray(out["y"]).shape == (2048, 2)
+        assert sess.last_shard_stats is None
+    for ex in exs:
+        ex.shutdown()
+
+
+def test_shard_calls_knob_opts_in_by_default(monkeypatch):
+    rows = []
+    exs = _mlp_pool(2, record=rows)
+    monkeypatch.setenv("AVEC_SHARD_CALLS", "1")
+    x = {"x": np.zeros((1024, 2), np.float32)}
+    with avec.connect(exs) as client:
+        sess = client.session({"a": 1}, _PARAMS, "tiny", destination="d0")
+        sess.call("work", x)                        # no per-call flag
+        assert sess.last_shard_stats is not None
+        assert all(r < 1024 for r in rows)
+    for ex in exs:
+        ex.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# tracing: a sharded call still sums to its wall
+# ---------------------------------------------------------------------------
+
+def test_sharded_trace_sums_to_wall_with_stitch_span():
+    exs = _mlp_pool(2, per_row_sleep_s=2e-5)
+    x = {"x": np.zeros((2048, 4), np.float32)}
+    with avec.connect(exs) as client:
+        sess = client.session({"a": 1}, _PARAMS, "tiny", destination="d0")
+        sess.call("work", x)                        # warm models + jit
+        sess.call("work", x, shard=True)            # warm sibling frontends
+        trace_mod.get_sink().clear()
+        t0 = time.perf_counter()
+        sess.call("work", x, shard=True)
+        wall = time.perf_counter() - t0
+        cid = sess.last_shard_stats["call_id"]
+        sink = trace_mod.get_sink().recent(16)
+        parent = next(t for t in sink if t.call_id == cid)
+        # same acceptance bound as the unsharded trace gate: spans ≈ wall
+        assert abs(parent.total_span_s() - wall) <= 0.10 * wall
+        assert "stitch" in parent.span_names()
+        kids = [t for t in sink
+                if t.trace_id == parent.trace_id and t is not parent]
+        assert len(kids) == len(sess.last_shard_stats["shards"])
+        assert all(k.fn.startswith("work[") for k in kids)
+        assert all(k.call_id.startswith(cid + "/r") for k in kids)
+        # the parent's merged timeline is the slowest shard's critical
+        # path, so it can never overshoot the observed wall
+        assert max(k.wall_s for k in kids) <= wall
+    for ex in exs:
+        ex.shutdown()
