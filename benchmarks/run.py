@@ -142,6 +142,24 @@ def main() -> None:
                          f"(bound {dr['p99_ratio_bound']:.0f}x, "
                          f"dropped={dr['dropped']}, "
                          f"warm={dr['rehome'].get('warm')})"))
+            sh = report["shm_vs_tcp_localhost"]
+            rows.append(("dataplane/shm_speedup_vs_tcp",
+                         sh["speedup_vs_tcp"],
+                         f"{sh['shm_throughput_mbps']:.0f}MB/s ring vs "
+                         f"{sh['tcp_throughput_mbps']:.0f}MB/s loopback TCP "
+                         f"(hit_rate={sh['pool_hit_rate']:.2f}, "
+                         f"spills={sh['spills']})"))
+            cq = report["comm_quant_narrow_link"]
+            rows.append(("dataplane/comm_quant_payload_ratio",
+                         cq["payload_ratio"],
+                         f"{cq['quant_bytes_per_frame']:.0f}B vs "
+                         f"{cq['raw_bytes_per_frame']:.0f}B raw "
+                         f"(bounded={cq['within_error_bound']})"))
+            rows.append(("dataplane/comm_quant_effective_speedup",
+                         cq["effective_speedup"],
+                         f"{cq['quant_throughput_mbps']:.1f}MB/s effective "
+                         f"vs {cq['raw_throughput_mbps']:.1f}MB/s on a "
+                         f"{cq['link_bandwidth_mbps']:.0f}MB/s link"))
             io = report["intra_op_scaling"]
             rows.append(("dataplane/intra_op_speedup_2dest",
                          io["speedup_2"],

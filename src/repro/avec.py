@@ -47,6 +47,7 @@ extraction, replacing the deprecated positional ``args[2]`` convention.
 from __future__ import annotations
 
 import itertools
+import os
 import time
 import uuid
 from dataclasses import dataclass, field, replace
@@ -61,11 +62,12 @@ from repro.core.cluster import ClusterMembership, ReplicaGroup
 from repro.core.costmodel import Workload
 from repro.core.executor import (DestinationDraining, DestinationExecutor,
                                  HostRuntime, PipelinedHostRuntime,
-                                 RemoteError, TenantThrottled)
+                                 RemoteError, TenantThrottled, _gethostname)
 from repro.core.interception import (ArgSpec, AvecSession,
                                      InterceptionLibrary)
 from repro.core.migration import MigrationManager, SessionShadow
 from repro.core.scheduler import DeviceAwareScheduler, NoDestinationError
+from repro.core.shm import SharedMemoryChannel
 from repro.core.serialization import (PROTOCOL_VERSION, SUPPORTED_CODECS,
                                       tree_wire_bytes)
 from repro.core.transport import (Channel, ChannelClosed, DirectChannel,
@@ -82,6 +84,7 @@ __all__ = [
     "connect", "AvecClient", "ClientSession", "ConnectPolicy", "Endpoint",
     "Capabilities", "HandshakeError", "ArgSpec", "PROTOCOL_VERSION",
     "QoS", "TenantThrottled", "DestinationDraining", "ShardStitchError",
+    "negotiate_codec", "negotiate_codecs",
 ]
 
 
@@ -173,6 +176,12 @@ class ConnectPolicy:
     do)."""
     codec: str = "raw"              # requested; downgraded to peer's set
     prefer_pipelining: bool = True  # use PipelinedHostRuntime when possible
+    #: same-host tier selection: when a TCP-dialed peer's handshake
+    #: advertises a shared-memory doorbell on THIS host, silently re-dial it
+    #: over :class:`repro.core.shm.SharedMemoryChannel` (mmap ring,
+    #: zero-copy receive).  Cross-host peers are unaffected; set False to
+    #: pin the wire transport (e.g. when benchmarking TCP on localhost).
+    prefer_shm: bool = True
     #: pipelined window cap (adaptive below).  ``None`` resolves through
     #: the ``connect_max_in_flight`` knob (repro.obs.config) — env
     #: ``AVEC_CONNECT_MAX_IN_FLIGHT`` overrides even an explicit value
@@ -228,10 +237,12 @@ class Endpoint:
 
     @staticmethod
     def parse(target: Any, index: int) -> "Endpoint":
-        """Accepts ``"tcp://host:port"``, an in-process
-        :class:`DestinationExecutor`, an :class:`Endpoint`, a zero-arg
-        channel factory, or an ``(AcceleratorSpec, target)`` pair binding a
-        calibrated spec to any of the above."""
+        """Accepts ``"tcp://host:port"``, ``"shm://<doorbell path>"`` (the
+        AF_UNIX socket a :class:`repro.core.shm.SharedMemoryServer`
+        listens on), an in-process :class:`DestinationExecutor`, an
+        :class:`Endpoint`, a zero-arg channel factory, or an
+        ``(AcceleratorSpec, target)`` pair binding a calibrated spec to any
+        of the above."""
         spec = None
         if isinstance(target, tuple) and len(target) == 2 \
                 and isinstance(target[0], AcceleratorSpec):
@@ -240,10 +251,19 @@ class Endpoint:
             return target if spec is None else replace(target, spec=spec,
                                                        name=spec.name)
         if isinstance(target, str):
+            if target.startswith("shm://"):
+                path = target[len("shm://"):]
+                if not path:
+                    raise ValueError(f"malformed endpoint URL {target!r}")
+                spec = spec or replace(DEFAULT_ENDPOINT_SPEC,
+                                       name=f"ep{index}-shm")
+                return Endpoint(
+                    spec.name, spec,
+                    lambda p=path: SharedMemoryChannel.connect(p))
             if not target.startswith("tcp://"):
                 raise ValueError(
                     f"unsupported endpoint URL {target!r} (expected "
-                    f"tcp://host:port)")
+                    f"tcp://host:port or shm://path)")
             host, _, port = target[len("tcp://"):].rpartition(":")
             if not host or not port.isdigit():
                 raise ValueError(f"malformed endpoint URL {target!r}")
@@ -272,10 +292,25 @@ def _channel_pipelinable(ch: Channel) -> bool:
             and type(ch).recv is not Channel.recv)
 
 
+def negotiate_codecs(requested, peer_codecs: tuple) -> tuple:
+    """The negotiated on-wire codec PREFERENCE LIST for one link: the
+    requested codec(s), in order, filtered to what both sides implement,
+    always ending in ``raw`` (mandatory at every protocol version, so
+    negotiation cannot fail — an old peer that advertises nothing new gets
+    clean raw frames).  The serializer resolves the list per leaf
+    (``repro.core.serialization._select_codec``): compression codecs apply
+    to anything, quantizing codecs only to float leaves above the
+    ``comm_quant_min_bytes`` floor."""
+    req = (requested,) if isinstance(requested, str) else tuple(requested)
+    prefs = [c for c in req
+             if c != "raw" and c in peer_codecs and c in SUPPORTED_CODECS]
+    return (*prefs, "raw")
+
+
 def negotiate_codec(requested: str, peer_codecs: tuple) -> str:
-    """The requested codec if the peer decodes it, else ``raw`` (mandatory
-    at every protocol version, so negotiation cannot fail)."""
-    return requested if requested in peer_codecs else "raw"
+    """The PRIMARY negotiated codec (first preference) — the requested
+    codec if the peer decodes it, else ``raw``."""
+    return negotiate_codecs(requested, peer_codecs)[0]
 
 
 class AvecClient:
@@ -300,7 +335,7 @@ class AvecClient:
         self._endpoints: dict[str, Endpoint] = {}       # fixed after __init__
         self._caps: dict[str, Capabilities] = {}        # guarded-by: _lock
         self._runtimes: dict[str, HostRuntime] = {}     # guarded-by: _lock
-        self._codecs: dict[str, str] = {}               # guarded-by: _lock
+        self._codecs: dict[str, tuple] = {}             # guarded-by: _lock
         self._siblings: dict[tuple, AvecSession] = {}   # guarded-by: _lock
         self.migration = MigrationManager(self.registry, self.scheduler,
                                           self._runtime_for)
@@ -341,7 +376,12 @@ class AvecClient:
                     f"v{PROTOCOL_VERSION}.  Upgrade the older side (the "
                     f"wire format is not cross-version compatible) or pin "
                     f"both to the same repro release.")
-            codec = negotiate_codec(pol.codec, caps.codecs)
+            ch, caps = self._maybe_upgrade_shm(ch, caps)
+            codecs = negotiate_codecs(pol.codec, caps.codecs)
+            # runtimes carry the full preference tuple: the serializer
+            # resolves it per leaf, and a quantizing head can be spliced in
+            # later without renegotiating
+            codec = codecs if len(codecs) > 1 else codecs[0]
             if caps.pipelining and pol.prefer_pipelining \
                     and _channel_pipelinable(ch):
                 rt: HostRuntime = PipelinedHostRuntime(
@@ -349,6 +389,11 @@ class AvecClient:
                     copy_results=pol.copy_results,
                     max_in_flight=pol.max_in_flight,
                     adaptive_window=pol.adaptive_window)
+                qc = str(global_config().resolve("comm_quant_codec"))
+                if qc != "off" and qc in caps.codecs:
+                    # armed, not engaged: frames only quantize once the
+                    # adaptive window observes a link-bound session
+                    rt.quant_codec = qc
             else:
                 rt = HostRuntime(ch, codec=codec, timeout=pol.timeout,
                                  copy_results=pol.copy_results)
@@ -361,7 +406,7 @@ class AvecClient:
         with self._lock:
             self._caps[ep.name] = caps
             self._runtimes[ep.name] = rt
-            self._codecs[ep.name] = codec
+            self._codecs[ep.name] = codecs
         # re-dials REBIND the existing pool entry: replacing it would reset
         # live load accounting (inflight held by concurrent sessions) and
         # silently clear an explicit mark_unhealthy
@@ -376,6 +421,42 @@ class AvecClient:
         if hasattr(rt, "stats"):
             self.scheduler.attach_runtime(ep.name, rt)
         return rt
+
+    def _maybe_upgrade_shm(self, ch: Channel, caps: Capabilities):
+        """Same-host tier selection: a TCP-dialed peer that advertised a
+        shared-memory doorbell on THIS host is silently re-dialed over the
+        mmap ring (``repro.core.shm``) — the TCP probe connection closes and
+        every later frame lands in pooled shared memory.  Any failure to
+        upgrade (stale socket path, hostname mismatch, ring handshake error)
+        keeps the working TCP channel; the fast path is an optimization,
+        never a dependency."""
+        shm = (caps.raw.get("shm") or {}) if self.policy.prefer_shm else {}
+        path = shm.get("path")
+        if (not path or shm.get("host") != _gethostname()
+                or not isinstance(ch, TCPChannel)
+                or not os.path.exists(path)):
+            return ch, caps
+        try:
+            shm_ch = SharedMemoryChannel.connect(
+                path, timeout=self.policy.timeout)
+        except Exception:  # noqa: BLE001 — degraded tier, not a failure
+            return ch, caps
+        try:
+            reply = HostRuntime(shm_ch, timeout=self.policy.timeout).ping(
+                {"protocol_version": PROTOCOL_VERSION,
+                 "codecs": list(SUPPORTED_CODECS),
+                 "client": "repro.avec"})
+        except Exception:  # noqa: BLE001 — ring didn't answer; keep TCP
+            try:
+                shm_ch.close()
+            except Exception:  # noqa: BLE001
+                pass
+            return ch, caps
+        try:
+            ch.close()
+        except Exception:  # noqa: BLE001 — old probe conn, best-effort
+            pass
+        return shm_ch, Capabilities.from_ping(reply)
 
     def _runtime_for(self, name: str) -> HostRuntime:
         """The live runtime for pool member ``name``, re-dialing (with a
@@ -428,6 +509,13 @@ class AvecClient:
         return {n: self.scheduler.tenant_stats(n) for n in self.destinations}
 
     def codec_for(self, name: str) -> str:
+        """The PRIMARY negotiated codec for ``name`` (first preference)."""
+        with self._lock:
+            return self._codecs[name][0]
+
+    def codecs_for(self, name: str) -> tuple:
+        """The full negotiated codec preference list for ``name`` (always
+        ends in ``raw``; see :func:`negotiate_codecs`)."""
         with self._lock:
             return self._codecs[name]
 

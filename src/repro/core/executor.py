@@ -99,6 +99,7 @@ import collections
 import itertools
 import math
 import random
+import socket as _socket
 import threading
 import time
 import traceback
@@ -210,6 +211,13 @@ def _batch_signature(tree: Any) -> tuple:
 
 
 DEFAULT_TENANT = "default"
+
+
+def _gethostname() -> str:
+    try:
+        return _socket.gethostname()
+    except OSError:  # pragma: no cover - hostname lookup failure
+        return "unknown"
 
 #: weights are clamped here so a ~zero declared weight cannot make the DRR
 #: rotation spin unboundedly before its tenant accrues one request's deficit
@@ -530,6 +538,10 @@ class DestinationExecutor:
         self.name = name
         self.fail = False          # fault-injection switch (tests/migration)
         self.draining = False      # zero-downtime drain: stop admitting runs
+        # set by launch.serve (or tests) when an SHM doorbell listens beside
+        # the TCP port: the ping handshake advertises it so same-host
+        # clients auto-upgrade to the zero-copy transport
+        self.shm_address: str | None = None
         self.coalesce_window_s = float(cfg.resolve("coalesce_window_s",
                                                    coalesce_window_s))
         self.max_coalesce = int(cfg.resolve("max_coalesce", max_coalesce))
@@ -752,6 +764,11 @@ class DestinationExecutor:
             # overrides and constructor args already folded in), so a
             # client sees the remote end's actual tuning
             "config": self.effective_config(),
+            # same-host zero-copy path: when an SHM doorbell listens beside
+            # this executor, clients on the same host swap their TCP probe
+            # channel for a SharedMemoryChannel (repro.avec prefer_shm)
+            "shm": ({"path": self.shm_address, "host": _gethostname()}
+                    if self.shm_address else None),
         }, None, "raw"
 
     def effective_config(self) -> dict:
@@ -800,6 +817,11 @@ class DestinationExecutor:
 
     def _op_run(self, meta, tree):
         codec = meta.get("codec", "raw")
+        if isinstance(codec, list):
+            # negotiated codec preference list (msgpack round-trips tuples
+            # as lists): normalize so the coalesce key stays hashable and
+            # the response pack resolves per-leaf like the request did
+            codec = tuple(codec)
         tenant = meta.get("tenant") or DEFAULT_TENANT
         call_id = meta.get("call_id")
         if call_id is not None:
@@ -1002,8 +1024,12 @@ class HostRuntime:
 
     def _run_meta(self, fp: str, fn: str, batchable: bool,
                   tenant: str | None, qos: dict | None,
-                  call_id: str | None = None) -> dict:
-        meta = {"op": "run", "fp": fp, "fn": fn, "codec": self.codec,
+                  call_id: str | None = None, codec=None) -> dict:
+        # meta["codec"] tells the destination how to encode the RESPONSE;
+        # a preference tuple rides as a msgpack list and is normalized back
+        # by _op_run, so both directions resolve per leaf
+        meta = {"op": "run", "fp": fp, "fn": fn,
+                "codec": self.codec if codec is None else codec,
                 "batchable": batchable}
         if tenant is not None:
             meta["tenant"] = tenant
@@ -1174,6 +1200,11 @@ class PipelinedHostRuntime(HostRuntime):
         self._sends_resumed = 0                          # guarded-by: _cv
         self._recv_retries = 0                           # guarded-by: _cv
         self._requests_completed = 0                     # guarded-by: _cv
+        # comm_quant: set by the facade after the handshake (knob on AND
+        # peer advertised the codec); None leaves the base codec untouched
+        self.quant_codec: str | None = None
+        self._quant_frames = 0                           # guarded-by: _cv
+        self._quant_bytes_saved = 0                      # guarded-by: _cv
 
     # ------------------------------------------------------------------
     def submit(self, meta: dict, tree=None, codec: str = "raw",
@@ -1219,6 +1250,14 @@ class PipelinedHostRuntime(HostRuntime):
             req = pack_message(meta, tree, codec=codec, request_id=rid)
             if trace is not None:
                 trace.add("serialize", time.perf_counter() - t_ser)
+            # comm_quant accounting: a preference tuple headed by a quant
+            # codec means _effective_codec engaged — record what the lossy
+            # encode shaved off the raw leaf bytes (floor 0: tiny leaves
+            # fall back to raw under the min-bytes knob)
+            quant_saved = -1
+            if (tree is not None and isinstance(codec, tuple) and codec
+                    and codec[0] in ("int8", "fp16")):
+                quant_saved = max(tree_wire_bytes(tree) - len(req), 0)
             deadline = time.monotonic() + self.timeout
             t_send = time.perf_counter()
             with self._slock:
@@ -1229,6 +1268,9 @@ class PipelinedHostRuntime(HostRuntime):
                 trace.add("send", time.perf_counter() - t_send)
             with self._cv:
                 self.bytes_sent += len(req)
+                if quant_saved >= 0:
+                    self._quant_frames += 1
+                    self._quant_bytes_saved += quant_saved
         except BaseException:
             with self._cv:
                 self._pending.pop(rid, None)
@@ -1488,6 +1530,26 @@ class PipelinedHostRuntime(HostRuntime):
              trace=None) -> tuple[dict, Any]:
         return self.wait(self.submit(meta, tree, codec=codec, trace=trace))
 
+    def _effective_codec(self):
+        """Wire codec for the next ``run``: the configured base, upgraded
+        to a quantizing preference list once the adaptive window's EMAs say
+        the LINK (not destination compute) bounds throughput.  Engagement
+        needs a few observations so one cold-start outlier can't flip it;
+        when compute re-dominates (codec shrank the wire share below the
+        compute EMA) the next calls naturally fall back to the base codec —
+        the same feedback loop that sizes the window."""
+        if not self.quant_codec:
+            return self.codec
+        with self._cv:
+            w = self._window
+            engaged = w.observations >= 4 and w.wire_ema > w.compute_ema
+        if not engaged:
+            return self.codec
+        base = self.codec if isinstance(self.codec, tuple) else (self.codec,)
+        prefs = (self.quant_codec,
+                 *(c for c in base if c != self.quant_codec))
+        return prefs if "raw" in prefs else (*prefs, "raw")
+
     def run_async(self, fp: str, fn: str, args, batchable: bool = False, *,
                   tenant: str | None = None, qos: dict | None = None,
                   call_id: str | None = None, trace=None) -> Future:
@@ -1498,9 +1560,11 @@ class PipelinedHostRuntime(HostRuntime):
         synchronous :meth:`run` wrapper (and the serving frontends) own the
         jittered retry loop."""
         args_np = jax.tree_util.tree_map(np.asarray, args)
+        codec = self._effective_codec()
         inner = self.submit(
-            self._run_meta(fp, fn, batchable, tenant, qos, call_id),
-            args_np, codec=self.codec, trace=trace)
+            self._run_meta(fp, fn, batchable, tenant, qos, call_id,
+                           codec=codec),
+            args_np, codec=codec, trace=trace)
 
         def _record(f: Future) -> None:
             if f.exception() is None:
@@ -1560,6 +1624,9 @@ class PipelinedHostRuntime(HostRuntime):
                 "wire_ema_s": self._window.wire_ema,
                 "compute_ema_s": self._window.compute_ema,
                 "window_observations": self._window.observations,
+                "quant_codec": self.quant_codec,
+                "quant_frames": self._quant_frames,
+                "quant_bytes_saved": self._quant_bytes_saved,
             }
 
     def close(self) -> None:

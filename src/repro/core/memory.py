@@ -44,9 +44,10 @@ Lease rules for new consumers:
    belt-and-braces error paths are safe, but a balanced pool —
    ``outstanding() == 0`` at teardown — is the invariant tests gate on.
 
-This interface is deliberately transport-agnostic: a future shared-memory
-or RDMA transport registers its pinned region as the slab backing and the
-whole consumer chain above it is already lease-correct.
+This interface is deliberately transport-agnostic: a shared-memory or RDMA
+transport registers its pinned region as the slab backing (``backing=`` —
+``repro.core.shm`` carves its mmap ring through it) and the whole consumer
+chain above it is already lease-correct.
 """
 from __future__ import annotations
 
@@ -97,13 +98,17 @@ class PooledView(np.ndarray):
 
 
 class _Slab:
-    __slots__ = ("buf", "view", "offset", "live")
+    __slots__ = ("buf", "view", "offset", "live", "base")
 
-    def __init__(self, nbytes: int) -> None:
-        self.buf = bytearray(nbytes)
+    def __init__(self, nbytes: int, buf=None, base: int = -1) -> None:
+        # ``buf`` non-None: the slab is a window carved from an external
+        # backing region (shared memory / pinned DMA) at region offset
+        # ``base`` instead of a private heap bytearray.
+        self.buf = bytearray(nbytes) if buf is None else buf
         self.view = memoryview(self.buf)
         self.offset = 0         # bump cursor
         self.live = 0           # leases carved from this slab still held
+        self.base = base        # region offset of byte 0 (-1: heap slab)
 
 
 class BufferLease:
@@ -114,15 +119,21 @@ class BufferLease:
     keep working, while lease-aware layers use :attr:`view` for zero-copy
     access and :meth:`retain`/:meth:`release` for lifetime."""
 
-    __slots__ = ("pool", "view", "nbytes", "_slab", "_refs")
+    __slots__ = ("pool", "view", "nbytes", "_slab", "_refs",
+                 "region_offset")
 
     def __init__(self, pool: "BufferPool", view: memoryview,
-                 slab: _Slab | None) -> None:
+                 slab: _Slab | None, region_offset: int = -1) -> None:
         self.pool = pool
         self.view = view
         self.nbytes = len(view)
         self._slab = slab
         self._refs = 1
+        #: byte offset of this lease within the pool's external backing
+        #: region (-1 for heap-backed leases) — the address a shared-memory
+        #: transport puts in its doorbell token so the peer maps the same
+        #: bytes without any copy.
+        self.region_offset = region_offset
 
     # -- bytes-like compatibility --------------------------------------
     def __len__(self) -> int:
@@ -202,14 +213,34 @@ class BufferPool:
     miss/fallback semantics and sizing guidance."""
 
     def __init__(self, slab_bytes: Optional[int] = None,
-                 slabs: Optional[int] = None, name: str = "pool") -> None:
+                 slabs: Optional[int] = None, name: str = "pool",
+                 backing: Optional[memoryview] = None) -> None:
         cfg = global_config()
         self.slab_bytes = int(cfg.resolve("pool_slab_bytes", slab_bytes))
         self.max_slabs = max(int(cfg.resolve("pool_slabs", slabs)), 1)
         self.name = name
+        self.backing = backing
         self._lock = _sanitize.make_rlock(f"BufferPool[{name}]._lock")
         self._slabs: list[_Slab] = []   # guarded-by: _lock
         self._cursor = 0                # guarded-by: _lock
+        if backing is not None:
+            # External backing region (the shared-memory/RDMA hook the
+            # module docstring promises): carve it eagerly into as many
+            # full slabs as fit and never heap-grow past them — a frame
+            # that can't be placed falls back (counted) exactly like an
+            # exhausted heap pool, and the transport decides what a
+            # fallback means (e.g. spill over the control socket).
+            n = len(backing) // self.slab_bytes
+            if n < 1:
+                raise ValueError(
+                    f"backing region ({len(backing)} B) smaller than one "
+                    f"slab ({self.slab_bytes} B)")
+            self.max_slabs = n
+            for i in range(n):
+                base = i * self.slab_bytes
+                self._slabs.append(_Slab(
+                    self.slab_bytes,
+                    buf=backing[base:base + self.slab_bytes], base=base))
         self._live = 0                  # guarded-by: _lock (leases with refs > 0)
         self.acquired = 0               # guarded-by: _lock
         self.released = 0               # guarded-by: _lock
@@ -244,7 +275,8 @@ class BufferPool:
                     self.miss_exhausted += 1
                 else:
                     view = slab.view[slab.offset:slab.offset + nbytes]
-                    lease = BufferLease(self, view, slab)
+                    off = (slab.base + slab.offset) if slab.base >= 0 else -1
+                    lease = BufferLease(self, view, slab, off)
                     slab.offset += nbytes
                     slab.live += 1
                     self.hits += 1

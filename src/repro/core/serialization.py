@@ -57,7 +57,21 @@ Codecs (beyond-paper, the slow-link levers):
   zstd  — lossless entropy compression (zstandard if available, else zlib;
           each leaf records the algorithm in its ``alg`` meta so nodes on
           different images interoperate)
-  int8  — per-row symmetric quantization (repro.kernels.comm_quant) + zstd
+  zlib  — lossless compression forced to stdlib zlib (for peers without
+          zstandard; encoded as codec ``zstd`` + ``alg: zlib`` on the wire
+          so any same-version peer decodes it)
+  int8  — per-row symmetric quantization (repro.kernels.comm_quant),
+          shipped uncompressed (quantized noise defeats entropy coding;
+          the 4x is the quantization itself)
+  fp16  — half-precision cast of float leaves (lossy ~2^-11 relative;
+          leaves whose absmax overflows float16 fall through)
+
+``codec`` may also be a **negotiated preference list** (see
+``repro.avec.negotiate_codecs``): each leaf takes the first feasible codec
+— quant codecs only for float leaves at least ``comm_quant_min_bytes``
+long, compression for the rest — ending in ``raw``.  A single codec
+*string* keeps the legacy forced semantics (explicit ``codec="int8"``
+quantizes any eligible float leaf regardless of the knob floor).
 """
 from __future__ import annotations
 
@@ -115,7 +129,13 @@ PROTOCOL_VERSION = 2
 # Codecs this node can encode AND decode (see module docstring).  zstd is
 # always listed: the encoder falls back to zlib and records the algorithm in
 # the leaf meta, so any peer of the same protocol version can decode it.
-SUPPORTED_CODECS = ("raw", "zstd", "int8")
+# This tuple is what the capability handshake advertises; codec selection is
+# a single negotiated list (repro.avec.negotiate_codecs) shared by the
+# compressors and the quant codecs, ending in "raw" for old peers.
+SUPPORTED_CODECS = ("raw", "zstd", "zlib", "int8", "fp16")
+
+#: quantizable wire dtypes (the codecs are float-only by construction)
+_QUANT_DTYPES = (np.float32, np.float64)
 
 # Typed wire errors: the complete serialization error table.  Every error
 # class a destination can surface over the wire (RemoteError and its
@@ -229,22 +249,57 @@ def _np_dtype(name: str):
 # Codecs
 # ---------------------------------------------------------------------------
 
-def _encode_leaf(arr: np.ndarray, codec: str):
-    """-> (buffer segment, leaf meta).  raw segments are zero-copy views."""
+def _quantizable(arr: np.ndarray) -> bool:
+    return arr.dtype in _QUANT_DTYPES and arr.ndim >= 1 and arr.size >= 64
+
+
+def _select_codec(arr: np.ndarray, prefs, min_quant_bytes: int) -> str:
+    """Resolve a negotiated preference list to one leaf's codec: first
+    feasible entry wins (quant codecs need an eligible float leaf at least
+    ``min_quant_bytes`` long; fp16 additionally a representable absmax)."""
+    for c in prefs:
+        if c in ("int8", "fp16"):
+            if not _quantizable(arr) or arr.nbytes < min_quant_bytes:
+                continue
+            if c == "fp16" and float(np.max(np.abs(arr))) > 65504.0:
+                continue                    # would overflow to inf on cast
+            return c
+        if c in ("zstd", "zlib", "raw"):
+            return c
+    return "raw"
+
+
+def _encode_leaf(arr: np.ndarray, codec, min_quant_bytes: int = 0):
+    """-> (buffer segment, leaf meta).  raw segments are zero-copy views.
+
+    ``codec`` is a single codec name (legacy forced semantics) or a
+    negotiated preference tuple resolved per leaf by :func:`_select_codec`.
+    """
     meta = {"dtype": str(arr.dtype), "shape": list(arr.shape)}
-    if codec == "int8" and arr.dtype in (np.float32, np.float64) and arr.ndim >= 1 \
-            and arr.size >= 64:
-        from repro.kernels import ref as kref
-        flat = np.ascontiguousarray(arr.reshape(-1, arr.shape[-1]), np.float32)
-        q, s = kref.quantize_int8(flat)
-        q, s = np.asarray(q), np.asarray(s)
-        payload = _compress(q.tobytes() + s.tobytes())
+    if not isinstance(codec, str):
+        codec = _select_codec(arr, codec, min_quant_bytes)
+    if codec == "int8" and _quantizable(arr):
+        from repro.kernels import comm_quant as _cq
+        q, s = _cq.quantize_int8_np(arr)
+        # deliberately NO entropy pass on top: quantized activations are
+        # near-incompressible noise, and compressing them costs more CPU
+        # per frame than the handful of bytes it shaves — the 4x is the
+        # quantization itself (measured in comm_quant_narrow_link)
         meta["codec"] = "int8"
-        meta["alg"] = _COMPRESS_ALG
-        meta["rows"] = int(flat.shape[0])
-        return payload, meta
+        meta["rows"] = int(q.shape[0])
+        return q.tobytes() + s.tobytes(), meta
+    if codec == "fp16" and _quantizable(arr):
+        half = np.ascontiguousarray(arr, np.float16)
+        meta["codec"] = "fp16"
+        return half.reshape(-1).view(np.uint8).data, meta
     raw = _leaf_view(arr)
-    if codec in ("zstd", "int8"):
+    if codec == "zlib":
+        # forced stdlib compression; wire form is the decodable-anywhere
+        # (codec=zstd, alg=zlib) pair old peers already understand
+        meta["codec"] = "zstd"
+        meta["alg"] = "zlib"
+        return zlib.compress(raw, 1), meta
+    if codec in ("zstd", "int8", "fp16"):
         meta["codec"] = "zstd"
         meta["alg"] = _COMPRESS_ALG
         return _compress(raw), meta
@@ -264,37 +319,47 @@ def _decode_leaf(buf, meta: dict, copy: bool,
             return lease.pin_ndarray(buf, dtype, shape)
         out = np.frombuffer(buf, dtype).reshape(shape)
         return out.copy() if copy else out
+    if codec == "fp16":
+        return np.frombuffer(buf, np.float16).reshape(shape).astype(dtype)
+    if codec == "int8":
+        # uncompressed [q int8 rows*cols][scales f32 rows] (see encode)
+        from repro.kernels import comm_quant as _cq
+        rows = meta["rows"]
+        cols = int(np.prod(shape)) // rows
+        raw = bytes(buf)
+        q = np.frombuffer(raw[: rows * cols], np.int8).reshape(rows, cols)
+        s = np.frombuffer(raw[rows * cols:], np.float32).reshape(rows, 1)
+        return _cq.dequantize_int8_np(q, s, dtype).reshape(shape)
     raw = _decompress(buf, meta.get("alg", _COMPRESS_ALG))
-    if codec == "zstd":
-        out = np.frombuffer(raw, dtype).reshape(shape)
-        # the fresh decompress buffer is owning but immutable (bytes); the
-        # copy=True escape hatch must still yield a writable array
-        return out.copy() if copy else out
-    # int8: [q int8 rows*cols][scales f32 rows]
-    rows = meta["rows"]
-    cols = int(np.prod(shape)) // rows
-    q = np.frombuffer(raw[: rows * cols], np.int8).reshape(rows, cols)
-    s = np.frombuffer(raw[rows * cols:], np.float32).reshape(rows, 1)
-    return (q.astype(np.float32) * s).reshape(shape).astype(dtype)
+    out = np.frombuffer(raw, dtype).reshape(shape)
+    # the fresh decompress buffer is owning but immutable (bytes); the
+    # copy=True escape hatch must still yield a writable array
+    return out.copy() if copy else out
 
 
 # ---------------------------------------------------------------------------
 # Messages
 # ---------------------------------------------------------------------------
 
-def pack_message(meta: dict, tree: Any = None, codec: str = "raw",
+def pack_message(meta: dict, tree: Any = None, codec="raw",
                  request_id: int = 0) -> Frame:
     """Pack (meta, pytree) into a vectored :class:`Frame`.
 
     ``raw``-codec leaf segments are memoryviews over the (contiguous) source
     arrays — no serialization copy.  Use ``bytes(frame)`` for the joined
-    legacy form.
+    legacy form.  ``codec`` may be a single name or a negotiated preference
+    list (resolved per leaf; see module docstring).
     """
+    min_q = 0
+    if not isinstance(codec, str):
+        codec = tuple(codec)
+        from repro.obs.config import global_config
+        min_q = int(global_config().resolve("comm_quant_min_bytes"))
     leaves: list[np.ndarray] = []
     tmpl = _flatten(tree, leaves) if tree is not None else None
     bufs, metas = [], []
     for arr in leaves:
-        b, m = _encode_leaf(arr, codec)
+        b, m = _encode_leaf(arr, codec, min_q)
         bufs.append(b)
         metas.append(m)
     header = msgpack.packb({

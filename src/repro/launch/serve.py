@@ -27,6 +27,7 @@ from repro import avec
 from repro.configs import get_arch, list_archs, reduced
 from repro.core.executor import DestinationExecutor
 from repro.core.library import make_model_library
+from repro.core.shm import SharedMemoryServer
 from repro.core.transport import TCPServer
 from repro.models import model as M
 from repro.obs import metrics as obs_metrics
@@ -43,10 +44,22 @@ def main() -> None:
     ap.add_argument("--port", type=int, default=0)
     ap.add_argument("--connect", default="127.0.0.1:9000",
                     help="host role: comma-separated destination "
-                         "addresses host:port[,host:port...]")
+                         "addresses host:port[,host:port...]; a "
+                         "shm:///path/doorbell.sock entry dials a "
+                         "same-host shared-memory destination directly")
     ap.add_argument("--codec", default="raw",
                     help="host role: requested wire codec (downgraded to "
                          "what the peer advertises)")
+    ap.add_argument("--transport", default="tcp",
+                    choices=["tcp", "shm", "both"],
+                    help="destination role: listeners to stand up.  'shm' "
+                         "serves same-host clients over a shared-memory "
+                         "ring (mmap zero-copy); 'both' adds the SHM "
+                         "doorbell beside TCP and advertises it in the "
+                         "handshake so same-host clients auto-upgrade")
+    ap.add_argument("--shm-path", default=None,
+                    help="destination role: AF_UNIX doorbell path for the "
+                         "SHM listener (default: a fresh temp dir)")
     ap.add_argument("--coalesce", action="store_true",
                     help="destination role: micro-batch concurrent "
                          "batchable run ops into stacked dispatches")
@@ -104,10 +117,23 @@ def main() -> None:
                                  tenant_weights=weights or None,
                                  tenant_max_inflight=args.tenant_max_inflight,
                                  tenant_max_bytes=args.tenant_max_bytes)
-        server = TCPServer(ex.handle, port=args.port).start()
-        # the recv-pool lives on the server, not the executor — bind it into
-        # the executor's registry so one scrape covers the whole destination
-        obs_metrics.bind_server(ex.metrics, server)
+        server = shm_server = None
+        if args.transport in ("tcp", "both"):
+            server = TCPServer(ex.handle, port=args.port).start()
+            # the recv-pool lives on the server, not the executor — bind it
+            # into the executor's registry so one scrape covers the whole
+            # destination
+            obs_metrics.bind_server(ex.metrics, server)
+        if args.transport in ("shm", "both"):
+            shm_server = SharedMemoryServer(ex.handle,
+                                            path=args.shm_path).start()
+            # advertised in every ping reply: same-host clients that dialed
+            # TCP see the doorbell and silently re-dial over the ring
+            ex.shm_address = shm_server.address
+            obs_metrics.bind_pool_stats(ex.metrics, shm_server.pool_stats,
+                                        pool="shm-server")
+            emit("shm_listening", path=shm_server.address,
+                 ring_bytes=shm_server.ring_bytes)
         metrics_port = int(global_config().resolve("metrics_port",
                                                    args.metrics_port))
         msrv = None
@@ -116,7 +142,9 @@ def main() -> None:
                                              port=metrics_port).start()
             emit("metrics_listening", port=msrv.port,
                  url=f"http://127.0.0.1:{msrv.port}/metrics")
-        emit("destination_listening", arch=args.arch, port=server.port,
+        emit("destination_listening", arch=args.arch,
+             port=server.port if server is not None else None,
+             transport=args.transport,
              coalesce=args.coalesce, tenant_weights=weights,
              tenant_max_inflight=args.tenant_max_inflight,
              tenant_max_bytes=args.tenant_max_bytes)
@@ -136,12 +164,17 @@ def main() -> None:
                      pending=res["pending"], replay_hits=ex.replay_hits)
             if msrv is not None:
                 msrv.stop()
-            server.stop()
+            if shm_server is not None:
+                shm_server.stop()
+            if server is not None:
+                server.stop()
             ex.shutdown()
         return
 
     if args.role == "host":
-        targets = [f"tcp://{addr.strip()}"
+        targets = [addr.strip() if addr.strip().startswith(("tcp://",
+                                                            "shm://"))
+                   else f"tcp://{addr.strip()}"
                    for addr in args.connect.split(",") if addr.strip()]
         with avec.connect(targets, codec=args.codec, shadow_every=0,
                           max_in_flight=args.max_in_flight) as client:

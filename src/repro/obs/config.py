@@ -261,6 +261,22 @@ def _register_defaults(cfg: GlobalConfig) -> None:
         "Default for ClientSession.call(shard=None): opt stateless "
         "facade calls into intra-call sharding without per-call flags "
         "(stateful decode streams must stay unsharded).")
+    # -- transports / codecs ----------------------------------------------
+    reg("shm_ring_bytes", int, 16 << 20,
+        "Per-direction shared-memory ring size for SharedMemoryChannel, "
+        "bytes.  Each side's send pool carves its TX half of the mmap "
+        "into slabs; frames that do not fit spill over the doorbell "
+        "socket (counted, never an error).")
+    reg("comm_quant_codec", str, "off",
+        "Auto-engaged wire quantization for link-bound pipelined "
+        "sessions: 'int8' (per-row scales), 'fp16', or 'off'.  Engages "
+        "only once the adaptive window's wire EMA exceeds its compute "
+        "EMA and the peer advertised the codec in the handshake.")
+    reg("comm_quant_min_bytes", int, 4096,
+        "Smallest float leaf (bytes) a negotiated codec *list* will "
+        "quantize; smaller leaves fall through to compression/raw.  An "
+        "explicit single-codec request (codec='int8') ignores this "
+        "floor.")
     # -- cluster ----------------------------------------------------------
     reg("heartbeat_interval_s", float, 0.05,
         "HeartbeatMonitor ping cadence, seconds (jittered).")

@@ -307,6 +307,15 @@ def bind_runtime(reg: MetricsRegistry, runtime, **labels) -> None:
               "the adaptive window controller."
               ).bind(_stat(stats, "compute_ema_s"), **labels)
 
+    reg.counter("avec_comm_quant_frames_total",
+                "Request frames sent with a quantizing wire codec engaged "
+                "(comm_quant: the adaptive window judged the link bound)."
+                ).bind(_stat(stats, "quant_frames"), **labels)
+    reg.counter("avec_comm_quant_bytes_saved_total",
+                "Raw leaf bytes minus encoded frame bytes summed over "
+                "quantized request frames (wire traffic comm_quant avoided)."
+                ).bind(_stat(stats, "quant_bytes_saved"), **labels)
+
     def recv_pool_hit_rate() -> float:
         pool = stats().get("recv_pool") or {}
         return float(pool.get("hit_rate", 0.0))
@@ -388,6 +397,37 @@ def bind_pool_stats(reg: MetricsRegistry,
 def bind_server(reg: MetricsRegistry, server, **labels) -> None:
     """Expose a TCPServer's aggregated recv-pool stats."""
     bind_pool_stats(reg, server.pool_stats, pool="server", **labels)
+
+
+def bind_shm_channel(reg: MetricsRegistry, channel, **labels) -> None:
+    """Expose a SharedMemoryChannel's ring counters (``stats()``) —
+    occupancy is the capacity-planning signal for the ``shm_ring_bytes``
+    knob, spills the symptom when it is sized too small."""
+    stats = channel.stats
+    reg.gauge("avec_shm_ring_occupancy",
+              "Fraction of the shared-memory TX ring held by in-flight "
+              "(not yet credited) frames."
+              ).bind(_stat(stats, "ring_occupancy"), **labels)
+    reg.gauge("avec_shm_tx_outstanding_frames",
+              "Frames parked in the shared-memory TX ring awaiting the "
+              "receiver's credit.").bind(
+                  _stat(stats, "tx_outstanding_frames"), **labels)
+    reg.counter("avec_shm_frames_total",
+                "Frames carried through the shared-memory ring."
+                ).bind(_stat(stats, "frames_sent"), direction="sent",
+                       **labels)
+    reg.counter("avec_shm_frames_total",
+                "Frames carried through the shared-memory ring."
+                ).bind(_stat(stats, "frames_received"),
+                       direction="received", **labels)
+    reg.counter("avec_shm_spills_total",
+                "Frames too large for a ring slab that degraded to the "
+                "doorbell socket.").bind(_stat(stats, "spills_sent"),
+                                         direction="sent", **labels)
+    reg.counter("avec_shm_spills_total",
+                "Frames too large for a ring slab that degraded to the "
+                "doorbell socket.").bind(_stat(stats, "spills_received"),
+                                         direction="received", **labels)
 
 
 def bind_heartbeat(reg: MetricsRegistry, monitor, **labels) -> None:

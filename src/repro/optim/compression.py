@@ -13,18 +13,18 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops
+from repro.kernels import comm_quant
 
 
 def _q_leaf(x):
-    flat = x.reshape(-1, x.shape[-1]) if x.ndim >= 2 else x.reshape(1, -1)
-    q, s = ops.quantize_int8(flat.astype(jnp.float32), impl="ref")
-    return q, s
+    # one quantization implementation repo-wide: the wire codec
+    # (core.serialization) and this compressor share comm_quant's leaf
+    # helpers, so the documented error bound holds on both paths
+    return comm_quant.quantize_leaf(x, impl="ref")
 
 
 def _dq_leaf(q, s, shape, dtype):
-    out = ops.dequantize_int8(q, s, jnp.float32, impl="ref")
-    return out.reshape(shape).astype(dtype)
+    return comm_quant.dequantize_leaf(q, s, shape, dtype, impl="ref")
 
 
 def compress_tree(tree):

@@ -32,7 +32,7 @@ from repro.core.library import make_model_library
 from repro.core.migration import (HeartbeatMonitor, MigrationManager,
                                   SessionShadow)
 from repro.core.scheduler import NoDestinationError
-from repro.core.serialization import unpack_message
+from repro.core.serialization import pack_message, unpack_message
 from repro.core.transport import (ChannelClosed, DirectChannel, FaultyChannel,
                                   LoopbackChannel, SimulatedChannel,
                                   TCPChannel, TCPServer, VirtualClock)
@@ -343,6 +343,76 @@ def test_faulty_channel_composes_over_simulated_link():
     assert b.recv(timeout=1.0) == payload
     assert sum(clock.elapsed.values()) > 0.0
     assert ch.stats()["dropped"] == 1
+
+
+def test_chaos_shm_faulty_validating_kill_peer_mid_frame():
+    """The wrapper channels compose over the shared-memory ring exactly as
+    over TCP: a ValidatingChannel-over-FaultyChannel client exchanges
+    seed-chosen frames with a peer, then the peer is killed mid-stream —
+    the blocked recv wakes with ChannelClosed at once (doorbell EOF, no
+    timeout poll), every outstanding TX lease is released, and the
+    validator saw zero protocol violations on the frames that did cross."""
+    from repro.analysis.protocol import ValidatingChannel
+    from repro.core.memory import release_buffer
+    from repro.core.shm import SharedMemoryChannel
+
+    shm_a, shm_b = SharedMemoryChannel.pair(ring_bytes=256 * 1024)
+    delay_at = 1 + (CHAOS_SEED % 3)     # seed moves the delayed frame
+    kill_after = 2 + (CHAOS_SEED % 4)   # seed moves the kill point
+    client = ValidatingChannel(
+        FaultyChannel(shm_a, seed=CHAOS_SEED, delay_sends=(delay_at,),
+                      delay_s=0.01),
+        side="client")
+
+    def peer():
+        # serve exactly kill_after requests, then go silent: the next
+        # request is on the wire when the peer is killed
+        for _ in range(kill_after):
+            try:
+                req = shm_b.recv(timeout=5)
+            except (ChannelClosed, TimeoutError):
+                return
+            meta, _ = unpack_message(req)
+            rid = meta.get("rid", 0)
+            release_buffer(req)
+            shm_b.send(pack_message({"ok": True}, request_id=rid))
+
+    t = threading.Thread(target=peer, daemon=True)
+    t.start()
+    x = np.zeros(4000, np.float32)
+    for rid in range(1, kill_after + 1):
+        client.send(pack_message(
+            {"op": "run", "rid": rid}, {"x": x}, request_id=rid))
+        resp = client.recv(timeout=5)
+        assert unpack_message(resp)[0]["ok"]
+        release_buffer(resp)
+    t.join(timeout=5)
+    # one more request in flight that nobody will ever answer
+    client.send(pack_message(
+        {"op": "run", "rid": 99}, {"x": x}, request_id=99))
+    errs = []
+
+    def blocked():
+        t0 = time.monotonic()
+        try:
+            client.recv(timeout=30)
+        except ChannelClosed:
+            errs.append(time.monotonic() - t0)
+
+    w = threading.Thread(target=blocked)
+    w.start()
+    time.sleep(0.05)
+    shm_b.close()                       # the mid-frame kill
+    w.join(timeout=5)
+    t.join(timeout=5)
+    assert errs and errs[0] < 2.0       # EOF woke it, not the 30s timeout
+    assert shm_a.stats()["tx_outstanding_frames"] == 0  # leases released
+    assert client.violations == 0
+    assert client.frames_validated >= 2 * kill_after
+    with pytest.raises(ChannelClosed):
+        client.send(pack_message({"op": "run", "rid": 100},
+                                 request_id=100))
+    shm_a.close()
 
 
 # ---------------------------------------------------------------------------

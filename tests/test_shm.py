@@ -1,0 +1,414 @@
+"""Shared-memory ring transport + negotiated comm_quant wire codecs.
+
+Covers the zero-copy contract end to end (sender's frame lands in slab
+memory the receiver's decoded views point into, credits recycle the ring),
+the counted spill degradation paths, peer-death semantics (ChannelClosed
+immediately, no stuck doorbell, no leaked leases), the
+``SharedMemoryServer`` / ``shm://`` endpoint / same-host auto-upgrade
+topologies, and the negotiated codec preference list — int8 engagement on
+the quant-armed runtime, the documented error bound on odd-shaped and
+non-contiguous leaves, and one quantization implementation shared by the
+wire codec and the gradient compressor.
+"""
+import gc
+import os
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro import avec
+from repro.configs import get_arch, reduced
+from repro.core import DestinationExecutor, PipelinedHostRuntime
+from repro.core.library import make_model_library
+from repro.core.memory import PooledView, release_buffer
+from repro.core.serialization import pack_message, unpack_message
+from repro.core.shm import SharedMemoryChannel, SharedMemoryServer
+from repro.core.transport import ChannelClosed, LoopbackChannel, TCPChannel, \
+    TCPServer
+from repro.kernels import comm_quant
+from repro.models import model as M
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = reduced(get_arch("granite-3-2b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    lib = make_model_library(cfg, max_cache_len=32)
+    return cfg, params, lib
+
+
+def _drained(outstanding_fn, deadline_s: float = 5.0) -> int:
+    deadline = time.monotonic() + deadline_s
+    while True:
+        gc.collect()
+        n = outstanding_fn()
+        if n == 0 or time.monotonic() >= deadline:
+            return n
+        time.sleep(0.02)
+
+
+def _pair(ring_bytes=1 << 20):
+    a, b = SharedMemoryChannel.pair(ring_bytes=ring_bytes)
+    return a, b
+
+
+# ---------------------------------------------------------------------------
+# ring data path: zero-copy, credits, spills
+# ---------------------------------------------------------------------------
+
+def test_pair_roundtrip_is_zero_copy_over_shared_pages():
+    """The receiver's decoded leaf views the very pages the sender's TX
+    lease wrote — proven by flipping a byte through the sender's lease and
+    watching it change under the receiver's already-decoded view."""
+    a, b = _pair()
+    try:
+        x = np.arange(16384, dtype=np.float32)
+        a.send(pack_message({"op": "run", "seq": 1}, {"x": x}))
+        lease = b.recv(timeout=5)
+        assert lease.pooled      # mapped straight over the peer's TX slab
+        meta, tree = unpack_message(lease)
+        assert meta["seq"] == 1
+        assert isinstance(tree["x"], PooledView)
+        np.testing.assert_array_equal(np.asarray(tree["x"]), x)
+        # same physical pages: sender-side mutation is visible through the
+        # receiver's view without any further transfer
+        (tx_lease,) = a._outstanding.values()
+        before = bytes(lease.view[-4:])
+        tx_lease.view[-1] ^= 0xFF
+        assert bytes(lease.view[-4:]) != before
+        del tree, meta
+        release_buffer(lease)
+        assert _drained(b.recv_pool.outstanding) == 0
+        a._poll_credits()        # receiver's CREDIT token frees the TX slab
+        assert a.stats()["tx_outstanding_frames"] == 0
+        assert a.stats()["credits_received"] == 1
+    finally:
+        a.close()
+        b.close()
+
+
+def test_credits_recycle_tx_slabs_without_spilling():
+    a, b = _pair(ring_bytes=256 * 1024)      # 4 x 64 KiB TX slabs
+    try:
+        payload = np.random.default_rng(0).random(12000).astype(np.float32)
+        for i in range(12):
+            a.send(pack_message({"op": "run", "i": i}, {"x": payload}))
+            lease = b.recv(timeout=5)
+            _, tree = unpack_message(lease)
+            np.testing.assert_array_equal(np.asarray(tree["x"]), payload)
+            del tree
+            release_buffer(lease)
+            assert _drained(b.recv_pool.outstanding) == 0
+        a._poll_credits()
+        sa, sb = a.stats(), b.stats()
+        assert sa["frames_sent"] == 12 and sb["frames_received"] == 12
+        assert sa["spills_sent"] == 0 and sb["spills_received"] == 0
+        assert sa["credits_received"] == 12
+        assert sa["tx_outstanding_frames"] == 0
+        assert sb["rx_pool"]["hit_rate"] == 1.0
+    finally:
+        a.close()
+        b.close()
+
+
+def test_oversize_frame_spills_over_doorbell_and_channel_survives():
+    a, b = _pair(ring_bytes=64 * 1024)       # 16 KiB slabs
+    try:
+        big = np.arange(20000, dtype=np.float32)         # 80 KB > slab
+        a.send(pack_message({"op": "run"}, {"x": big}))
+        got = b.recv(timeout=5)
+        assert isinstance(got, bytearray)    # spilled: plain heap buffer
+        _, tree = unpack_message(got)
+        np.testing.assert_array_equal(np.asarray(tree["x"]), big)
+        assert a.stats()["spills_sent"] == 1
+        assert b.stats()["spills_received"] == 1
+        # the ring still works for frames that fit
+        small = np.arange(64, dtype=np.float32)
+        a.send(pack_message({"op": "run"}, {"x": small}))
+        lease = b.recv(timeout=5)
+        assert lease.pooled
+        release_buffer(lease)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_ring_exhaustion_spills_then_recovers_on_credit():
+    """Every TX slab pinned by unreleased receiver leases -> the next send
+    degrades to a spill (counted, never an error); releasing the leases
+    credits the slabs back and pooled sends resume."""
+    a, b = _pair(ring_bytes=64 * 1024)       # 4 x 16 KiB slabs
+    try:
+        payload = np.zeros(2500, np.float32)            # ~10 KB frames
+        held = []
+        for _ in range(4):
+            a.send(pack_message({"op": "run"}, {"x": payload}))
+            held.append(b.recv(timeout=5))              # pin all 4 slabs
+        a.send(pack_message({"op": "run"}, {"x": payload}))
+        spilled = b.recv(timeout=5)
+        assert isinstance(spilled, bytearray)
+        assert a.stats()["spills_sent"] == 1
+        for lease in held:
+            release_buffer(lease)
+        a.send(pack_message({"op": "run"}, {"x": payload}))  # polls credits
+        lease = b.recv(timeout=5)
+        assert lease.pooled
+        release_buffer(lease)
+        sa = a.stats()
+        assert sa["credits_received"] >= 4 and sa["spills_sent"] == 1
+    finally:
+        a.close()
+        b.close()
+
+
+def test_peer_close_wakes_blocked_recv_and_releases_tx_leases():
+    """Peer death = doorbell EOF: a blocked recv turns into ChannelClosed
+    immediately (no timeout poll), and every outstanding TX lease is
+    released rather than leaked with the dead link."""
+    a, b = _pair()
+    a.send(pack_message({"op": "run"}, {"x": np.zeros(1024, np.float32)}))
+    errs = []
+
+    def blocked():
+        t0 = time.monotonic()
+        try:
+            a.recv(timeout=30)
+        except ChannelClosed:
+            errs.append(time.monotonic() - t0)
+
+    t = threading.Thread(target=blocked)
+    t.start()
+    time.sleep(0.1)
+    b.close()                               # peer dies mid-stream
+    t.join(timeout=5)
+    assert errs and errs[0] < 2.0           # woke on EOF, not the timeout
+    assert a.stats()["tx_outstanding_frames"] == 0
+    with pytest.raises(ChannelClosed):
+        a.send(pack_message({"op": "run"}, None))
+    a.close()
+
+
+# ---------------------------------------------------------------------------
+# server topology + facade integration
+# ---------------------------------------------------------------------------
+
+def test_server_request_response_and_backing_file_cleanup():
+    def handler(req):
+        meta, tree = unpack_message(req)
+        return pack_message({"ok": True, "echo": meta["tag"]},
+                            {"y": np.asarray(tree["x"]) * 2.0},
+                            request_id=meta.get("rid", 0))
+
+    server = SharedMemoryServer(handler).start()
+    try:
+        ch = SharedMemoryChannel.connect(server.address, timeout=5)
+        shm_path = ch.shm_path
+        assert os.path.exists(shm_path)
+        x = np.arange(4096, dtype=np.float32)
+        for tag in ("one", "two"):
+            ch.send(pack_message({"op": "run", "tag": tag}, {"x": x}))
+            resp = ch.recv(timeout=5)
+            meta, tree = unpack_message(resp)
+            assert meta["ok"] and meta["echo"] == tag
+            np.testing.assert_array_equal(np.asarray(tree["y"]), x * 2.0)
+            del tree
+            release_buffer(resp)
+        ch.close()
+        deadline = time.monotonic() + 5
+        while os.path.exists(shm_path) and time.monotonic() < deadline:
+            time.sleep(0.02)     # server unlinks the ring on disconnect
+        assert not os.path.exists(shm_path)
+        assert server.pool_stats()["outstanding"] == 0
+    finally:
+        server.stop()
+    assert not os.path.exists(server.path)
+
+
+def test_facade_shm_endpoint_negotiates_pipelined_runtime(lm):
+    """``shm://`` endpoints dial the ring directly and the handshake lands
+    the same pipelined tier TCP gets — quant codecs advertised."""
+    cfg, params, lib = lm
+    ex = DestinationExecutor({"lm": lib}, name="shm-dest")
+    server = SharedMemoryServer(ex.handle).start()
+    try:
+        with avec.connect([f"shm://{server.address}"]) as client:
+            name = client.destinations[0]
+            rt = client.runtime(name)
+            assert isinstance(rt, PipelinedHostRuntime)
+            assert isinstance(rt.channel, SharedMemoryChannel)
+            caps = client.capabilities(name)
+            assert "int8" in caps.codecs and "fp16" in caps.codecs
+            sess = client.session(cfg, params, "lm")
+            out = sess.call("prefill", {"tokens": np.zeros((1, 4), np.int32)})
+            assert out["logits"].shape[0] == 1
+    finally:
+        server.stop()
+
+
+def test_facade_auto_upgrades_same_host_tcp_to_shm(lm):
+    """A TCP dial whose ping advertises a same-host SHM listener silently
+    re-dials over the ring; ``prefer_shm=False`` pins TCP."""
+    cfg, params, lib = lm
+    ex = DestinationExecutor({"lm": lib}, name="dual-dest")
+    server = TCPServer(ex.handle).start()
+    shm_server = SharedMemoryServer(ex.handle).start()
+    ex.shm_address = shm_server.address
+    target = f"tcp://127.0.0.1:{server.port}"
+    try:
+        with avec.connect([target]) as client:
+            name = client.destinations[0]
+            assert isinstance(client.runtime(name).channel,
+                              SharedMemoryChannel)
+            sess = client.session(cfg, params, "lm")
+            out = sess.call("prefill", {"tokens": np.zeros((1, 4), np.int32)})
+            assert out["logits"].shape[0] == 1
+        with avec.connect([target], prefer_shm=False) as client:
+            name = client.destinations[0]
+            assert isinstance(client.runtime(name).channel, TCPChannel)
+    finally:
+        shm_server.stop()
+        server.stop()
+
+
+def test_sharded_map_and_coalescing_work_over_shm(lm):
+    """The PR-9 sharded map and PR-1 coalescing paths run unchanged over
+    the ring: two coalescing SHM destinations split a map and the results
+    match a single-destination reference."""
+    cfg, params, lib = lm
+    ex_a = DestinationExecutor({"lm": lib}, name="shm-a", coalesce=True)
+    ex_b = DestinationExecutor({"lm": lib}, name="shm-b", coalesce=True)
+    srv_a = SharedMemoryServer(ex_a.handle).start()
+    srv_b = SharedMemoryServer(ex_b.handle).start()
+    rng = np.random.default_rng(0)
+    reqs = {f"r{i}": {"tokens": rng.integers(
+        0, cfg.vocab_size, (1, 8)).astype(np.int32),
+        "targets": rng.integers(0, cfg.vocab_size, (1, 8)).astype(np.int32)}
+        for i in range(6)}
+    try:
+        with avec.connect([f"shm://{srv_a.address}",
+                           f"shm://{srv_b.address}"]) as client:
+            for name in client.destinations:
+                assert client.capabilities(name).coalesce
+            sess = client.session(cfg, params, "lm")
+            out = sess.map("score", reqs)
+        assert set(out) == set(reqs)
+        assert sorted(sess.last_map_stats["assigned"].values()) == [3, 3]
+        ref_ex = DestinationExecutor({"lm": lib}, name="ref")
+        with avec.connect([ref_ex]) as ref_client:
+            ref = ref_client.session(cfg, params, "lm").map("score", reqs)
+        for rid in reqs:
+            np.testing.assert_allclose(np.asarray(out[rid]["loss"]),
+                                       np.asarray(ref[rid]["loss"]),
+                                       rtol=1e-5)
+    finally:
+        srv_a.stop()
+        srv_b.stop()
+
+
+# ---------------------------------------------------------------------------
+# negotiated codec preference lists + comm_quant wire math
+# ---------------------------------------------------------------------------
+
+def test_negotiate_codecs_orders_filters_and_falls_back_to_raw():
+    assert avec.negotiate_codecs("zstd", ("raw", "zstd")) == ("zstd", "raw")
+    # an old peer advertising nothing new gets clean raw frames
+    assert avec.negotiate_codecs(("int8", "zstd"), ("raw",)) == ("raw",)
+    # order of the REQUEST wins; unknown/unsupported names are dropped
+    assert avec.negotiate_codecs(("int8", "zstd", "gzip"),
+                                 ("raw", "zstd", "zlib", "int8", "fp16")) \
+        == ("int8", "zstd", "raw")
+    assert avec.negotiate_codec("raw", ("raw", "zstd")) == "raw"
+
+
+def test_effective_codec_engages_only_when_link_bound():
+    """The quant codec joins the preference list only once the window
+    controller has seen enough frames AND the wire EMA dominates compute —
+    an unarmed runtime never changes its codec."""
+    a, b = LoopbackChannel.pair()
+    rt = PipelinedHostRuntime(a, codec="raw", max_in_flight=2, timeout=5)
+    try:
+        assert rt._effective_codec() == "raw"       # not armed
+        rt.quant_codec = "int8"
+        assert rt._effective_codec() == "raw"       # too few observations
+        with rt._cv:
+            rt._window.observations = 8
+            rt._window.wire_ema = 0.010
+            rt._window.compute_ema = 0.050
+        assert rt._effective_codec() == "raw"       # compute-bound: stay raw
+        with rt._cv:
+            rt._window.wire_ema = 0.050
+            rt._window.compute_ema = 0.010
+        assert rt._effective_codec() == ("int8", "raw")
+        rt.quant_codec = None
+        assert rt._effective_codec() == "raw"
+    finally:
+        rt.close()
+        b.close()
+
+
+@pytest.mark.parametrize("shape", [(7,), (3, 5), (2, 3, 5), (1, 1),
+                                   (129, 33)])
+def test_int8_wire_codec_error_bound_odd_shapes(shape):
+    rng = np.random.default_rng(42)
+    x = (rng.standard_normal(shape) * 3.0).astype(np.float32)
+    _, out = unpack_message(bytes(pack_message({"ok": True}, {"x": x},
+                                               codec="int8")))
+    y = np.asarray(out["x"])
+    assert y.shape == shape and y.dtype == np.float32
+    rows = comm_quant.leaf_rows(x)
+    bound = (np.max(np.abs(rows), axis=1, keepdims=True) / 254.0
+             * (1 + 1e-6) + 1e-7)
+    assert np.all(np.abs(comm_quant.leaf_rows(y) - rows) <= bound)
+
+
+def test_int8_wire_codec_non_contiguous_leaves():
+    """Strided and transposed views quantize identically to their packed
+    copies — the helper normalizes layout before the row reduction."""
+    base = (np.random.default_rng(3).standard_normal((64, 64))
+            .astype(np.float32))
+    for view in (base[:, ::2], base.T, base[1:61:3]):
+        assert not view.flags["C_CONTIGUOUS"]
+        frame = bytes(pack_message({"ok": True}, {"x": view}, codec="int8"))
+        ref = bytes(pack_message({"ok": True},
+                                 {"x": np.ascontiguousarray(view)},
+                                 codec="int8"))
+        _, out = unpack_message(frame)
+        _, rout = unpack_message(ref)
+        np.testing.assert_array_equal(np.asarray(out["x"]),
+                                      np.asarray(rout["x"]))
+
+
+def test_wire_codec_and_gradient_compressor_share_quant_math():
+    """Satellite dedupe proof: ``optim.compression`` and the int8 wire
+    codec produce the same dequantized values for the same leaf, because
+    both resolve to ``kernels.comm_quant``'s row-scaled helpers."""
+    from repro.optim.compression import compress_tree, decompress_tree
+    x = (np.random.default_rng(9).standard_normal((17, 12)) * 5.0
+         ).astype(np.float32)
+    _, wire_out = unpack_message(bytes(pack_message({"ok": True}, {"x": x},
+                                                    codec="int8")))
+    ctree, _ = compress_tree({"x": x})
+    comp_out = decompress_tree(ctree)
+    np.testing.assert_allclose(np.asarray(wire_out["x"]),
+                               np.asarray(comp_out["x"]),
+                               rtol=0, atol=1e-6)
+
+
+def test_quant_codec_floor_leaves_small_leaves_raw():
+    """Negotiated preference lists respect the ``comm_quant_min_bytes``
+    floor: tiny leaves ride raw (views, exact) while large ones quantize —
+    in the SAME frame."""
+    small = np.arange(8, dtype=np.float32)
+    big = np.random.default_rng(1).standard_normal((256, 64)) \
+        .astype(np.float32)
+    frame = bytes(pack_message({"ok": True}, {"s": small, "b": big},
+                               codec=("int8", "raw")))
+    assert len(frame) < small.nbytes + big.nbytes / 2
+    _, out = unpack_message(frame)
+    np.testing.assert_array_equal(np.asarray(out["s"]), small)  # exact
+    assert not np.array_equal(np.asarray(out["b"]), big)        # lossy
+    bound = np.max(np.abs(big), axis=1, keepdims=True) / 254.0 + 1e-7
+    assert np.all(np.abs(np.asarray(out["b"]) - big) <= bound)
